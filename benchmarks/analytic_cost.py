@@ -1,0 +1,199 @@
+"""Analytical per-chip FLOPs / HBM-bytes model for the roofline.
+
+XLA's ``cost_analysis`` counts a ``lax.scan`` body once, so the compiled
+artifact undercounts per-layer work by the trip count (documented in
+EXPERIMENTS.md).  This module rebuilds the true per-step costs by walking
+the architecture's layer pattern with the same sharding the dry-run uses
+(TP over 16, dp over the rest, padded heads/experts, replicated KV where
+not divisible) and the same execution plan (remat training: fwd + bwd +
+one fwd replay = 4x forward FLOPs; inference: 1x).
+
+Every matmul contributes ``2*m*k*n`` FLOPs and ``(m*k + k*n + m*n) * b``
+bytes; flash attention contributes its streaming traffic; the SSM scan
+its state traffic.  All values are per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.configs import get_config
+from repro.models.config import ModelConfig
+
+
+# Use the Pallas ssm_scan kernel's streaming traffic for the scan (the
+# deployable TPU path); False models the jnp associative-scan reference
+# which materializes the full (t, d, n) state history in HBM.
+SSM_KERNEL = True
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+
+    def matmul(self, m, k, n, b_in=2, b_w=2, b_out=2):
+        self.flops += 2.0 * m * k * n
+        self.bytes += m * k * b_in + k * n * b_w + m * n * b_out
+
+    def elementwise(self, elems, reads=2, writes=1, b=2, flops_per=1):
+        self.flops += elems * flops_per
+        self.bytes += elems * (reads + writes) * b
+
+
+def _attention(c: Cost, cfg: ModelConfig, t: int, lk: int, tp: int,
+               window):
+    """t local query tokens attending to lk keys (per chip)."""
+    d = cfg.d_model
+    hd = cfg.head_dim
+    nq_l = cfg.padded_heads(tp) // tp
+    nkv_l = cfg.n_kv_heads // tp if cfg.kv_sharded(tp) else cfg.n_kv_heads
+    c.matmul(t, d, nq_l * hd)                 # Q
+    c.matmul(t, d, nkv_l * hd)                # K
+    c.matmul(t, d, nkv_l * hd)                # V
+    eff_lk = min(lk, window) if window else lk
+    causal_frac = 0.5 if t == lk else 1.0     # causal prefill halves QK
+    score = 2.0 * t * eff_lk * nq_l * hd * causal_frac
+    c.flops += 2 * score                      # QK^T and PV
+    # flash streaming: read q,k,v once, write o
+    c.bytes += (t * nq_l * hd + 2 * eff_lk * nq_l * hd
+                + t * nq_l * hd) * 2
+    c.matmul(t, nq_l * hd, d)                 # output proj
+
+
+def _ffn(c: Cost, d: int, ff_l: int, t: int):
+    c.matmul(t, d, ff_l)          # gate
+    c.matmul(t, d, ff_l)          # up
+    c.elementwise(t * ff_l, flops_per=4)
+    c.matmul(t, ff_l, d)          # down
+
+
+def _moe(c: Cost, cfg: ModelConfig, t: int, tp: int):
+    m = cfg.moe
+    e_pad = m.padded_experts(tp)
+    # token-sharded dispatch (moe_forward shard_tokens): each tp shard
+    # routes a disjoint t/tp slice when tokens divide tp; otherwise the
+    # replicated path dispatches everything from every shard
+    t_route = t // tp if (tp > 1 and t % tp == 0 and t >= tp) else t
+    c.matmul(t_route, cfg.d_model, e_pad, b_w=4)    # router (f32)
+    routed = t_route * m.top_k * m.capacity_factor
+    _ffn(c, cfg.d_model, m.expert_d_ff, int(routed))
+    c.elementwise(t * cfg.d_model, reads=3, writes=1)  # combine+gather
+    if m.dense_residual_d_ff:
+        _ffn(c, cfg.d_model, m.dense_residual_d_ff // tp, t)
+
+
+def _mamba(c: Cost, cfg: ModelConfig, t: int, tp: int, version: int):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_l = s.expand * d // tp
+    n = s.d_state
+    c.matmul(t, d, d_l)           # in_x
+    c.matmul(t, d, d_l)           # in_z
+    # Scan HBM traffic: the jnp associative-scan reference materializes
+    # h_all (t, d_l, n) in f32 (4*t*d_l*n write + read); the Pallas
+    # ssm_scan kernel keeps the state in VMEM and only streams
+    # x/dt/B/C in + y out (§Perf H3 iteration 2).
+    scan_bytes = (2.0 * t * d_l * 2 + 2.0 * t * n * 4) if SSM_KERNEL \
+        else 8.0 * t * d_l * n
+    if version == 1:
+        r = s.dt_rank or math.ceil(d / 16)
+        c.matmul(t, d_l, r + 2 * n)      # x_proj
+        c.matmul(t, r, d_l)              # dt_proj
+        # scan: h (d_l, n) updated per step: ~6 flops per (chan, state)
+        c.flops += 6.0 * t * d_l * n
+        c.bytes += scan_bytes
+    else:
+        nh_l = d_l // s.headdim
+        c.matmul(t, d, 2 * n)            # in_bc
+        c.matmul(t, d, nh_l)             # in_dt
+        c.flops += 6.0 * t * d_l * n
+        c.bytes += scan_bytes
+    c.elementwise(t * d_l, flops_per=8)  # conv + silu + gate
+    c.matmul(t, d_l, d)           # out_proj
+
+
+def step_cost(arch: str, shape: dict, mesh_chips: int, tp: int = 16
+              ) -> Cost:
+    """Per-chip per-step cost for one (arch, input-shape) pair."""
+    cfg = get_config(arch)
+    kind = shape["kind"]
+    seq, gbatch = shape["seq_len"], shape["global_batch"]
+    dp = mesh_chips // tp
+    window = cfg.sliding_window if (kind == "decode"
+                                    and seq > 100_000
+                                    and any(ch in "ae"
+                                            for ch in cfg.layer_pattern)
+                                    ) else None
+
+    if kind == "train":
+        t_local = seq * gbatch // dp          # tokens per chip per step
+        lk = seq
+        passes = 4.0                          # fwd + remat fwd + bwd(2x)
+    elif kind == "prefill":
+        t_local = seq * gbatch // dp
+        lk = seq
+        passes = 1.0
+    else:
+        t_local = max(1, gbatch // dp) if gbatch >= dp else gbatch
+        lk = min(seq, window) if window else seq
+        passes = 1.0
+
+    c = Cost()
+    d = cfg.d_model
+    for ch in cfg.layer_pattern:
+        if ch == "a":
+            _attention(c, cfg, t_local, lk if kind != "train" else seq,
+                       tp, window)
+            _ffn(c, d, cfg.d_ff // tp, t_local)
+        elif ch == "e":
+            _attention(c, cfg, t_local, lk if kind != "train" else seq,
+                       tp, window)
+            _moe(c, cfg, t_local, tp)
+        else:
+            _mamba(c, cfg, t_local, tp, 1 if ch == "1" else 2)
+        c.elementwise(t_local * d, reads=4, writes=2)   # norms+residual
+
+    if cfg.encoder is not None:
+        enc_t = cfg.encoder.source_len * gbatch // dp
+        for _ in range(cfg.encoder.n_layers):
+            _attention(c, cfg, enc_t, cfg.encoder.source_len, tp, None)
+            _ffn(c, d, cfg.d_ff // tp, enc_t)
+        # decoder cross-attention per row
+        for _ in range(cfg.layer_pattern.count("a")):
+            _attention(c, cfg, t_local, cfg.encoder.source_len, tp, None)
+
+    # embedding + lm head (vocab sharded over tp)
+    v_l = cfg.padded_vocab(tp) // tp
+    c.bytes += t_local * d * 2                # embedding gather
+    c.matmul(t_local, d, v_l, b_out=4)        # logits (f32 xent)
+
+    c.flops *= passes
+    c.bytes *= passes
+    if kind == "train":
+        # optimizer + grads traffic: 3 f32 reads + 2 writes per local
+        # param element (adam m/v + grad) + bf16 param rw
+        local_params = cfg.param_count(tp) / mesh_chips
+        c.bytes += local_params * (5 * 4 + 2 * 2)
+    else:
+        # weights resident per chip are read once per token batch
+        c.bytes += cfg.param_count(tp) / tp * 2
+        if kind == "decode":
+            # KV cache / state read per decode step
+            c.bytes += _cache_bytes_per_chip(cfg, gbatch, lk, tp, dp)
+    return c
+
+
+def _cache_bytes_per_chip(cfg: ModelConfig, gbatch: int, lk: int,
+                          tp: int, dp: int) -> float:
+    b_local = max(1, gbatch // dp) if gbatch >= dp else gbatch
+    total = 0.0
+    for ch in cfg.layer_pattern:
+        if ch in "ae":
+            nkv = cfg.n_kv_heads
+            total += 2 * b_local * (lk / tp) * nkv * cfg.head_dim * 2
+        else:
+            s = cfg.ssm
+            d_l = s.expand * cfg.d_model // tp
+            total += b_local * d_l * s.d_state * 4
+    return total

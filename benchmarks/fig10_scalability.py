@@ -1,0 +1,47 @@
+"""Fig. 10: scalability 3 -> 6 -> 12 nodes, 128 MB - 4 GB, 6 CXL devices.
+
+The paper's own scalability numbers come from an emulator with the same
+assumptions as ours (even per-device sharing, independent devices).
+Checks the qualitative claims: AllReduce degrades super-linearly
+(2.1-3.0x at 6 nodes, 8.7-12.2x at 12), Broadcast grows mildly
+(1.26-1.40x / ~2.5x), AllToAll stays nearly flat (1.11-1.43x /
+1.44-1.83x).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import simulator
+from repro.core.hw import MiB
+
+SIZES = [128 * MiB, 512 * MiB, 1024 * MiB, 4096 * MiB]
+NODES = [3, 6, 12]
+PRIMS = ["all_reduce", "broadcast", "all_gather", "all_to_all"]
+
+
+def scaling(primitive: str) -> dict:
+    out = {}
+    for n in NODES:
+        out[n] = [simulator.run_variant("all", primitive, n,
+                                        s).total_time for s in SIZES]
+    ratios6 = [b / a for a, b in zip(out[3], out[6])]
+    ratios12 = [b / a for a, b in zip(out[3], out[12])]
+    return {"times": out, "r6": ratios6, "r12": ratios12}
+
+
+def run(emit) -> None:
+    paper = {"all_reduce": ((2.1, 3.0), (8.7, 12.2)),
+             "broadcast": ((1.26, 1.40), (2.2, 2.8)),
+             "all_to_all": ((1.11, 1.43), (1.44, 1.83)),
+             "all_gather": (None, None)}
+    for prim in PRIMS:
+        s = scaling(prim)
+        lo6, hi6 = min(s["r6"]), max(s["r6"])
+        lo12, hi12 = min(s["r12"]), max(s["r12"])
+        p6, p12 = paper[prim]
+        emit(f"fig10_{prim}_6node_slowdown", float(np.mean(s["r6"])),
+             f"range {lo6:.2f}-{hi6:.2f}" +
+             (f" (paper {p6[0]}-{p6[1]})" if p6 else ""))
+        emit(f"fig10_{prim}_12node_slowdown", float(np.mean(s["r12"])),
+             f"range {lo12:.2f}-{hi12:.2f}" +
+             (f" (paper {p12[0]}-{p12[1]})" if p12 else ""))

@@ -1,0 +1,29 @@
+"""Fig. 11: sensitivity to the slicing factor (number of chunks),
+AllGather, 1 GB messages, 3 nodes.
+
+Paper findings: single-chunk is worst (no publish/retrieve overlap);
+4-8 chunks best; total swing ~9%.
+"""
+from __future__ import annotations
+
+from repro.core import simulator
+from repro.core.hw import MiB
+
+FACTORS = [1, 2, 4, 8, 16, 32]
+
+
+def run(emit) -> None:
+    times = {}
+    for f in FACTORS:
+        times[f] = simulator.run_variant(
+            "all", "all_gather", 3, 1024 * MiB,
+            slicing_factor=f).total_time
+    best = min(times, key=times.get)
+    emit("fig11_best_slicing_factor", best, "paper: 4-8")
+    emit("fig11_worst_is_single_chunk",
+         int(max(times, key=times.get) == 1), "paper: 1 chunk worst")
+    emit("fig11_swing_pct",
+         100 * (max(times.values()) - min(times.values()))
+         / max(times.values()), "paper ~9%")
+    for f in FACTORS:
+        emit(f"fig11_time_f{f}_ms", times[f] * 1e3, "AllGather 1GiB")

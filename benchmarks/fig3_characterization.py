@@ -1,0 +1,45 @@
+"""Fig. 3 / Table 1: CXL shared-memory-pool characterization.
+
+Reproduces the microbenchmark *model* the paper measures: single-stream
+bandwidth vs transfer size (Fig. 3a ramp into the ~20 GB/s device/DMA
+ceiling), and concurrent multi-server reads/writes against one device
+sharing bandwidth evenly (Fig. 3b/3c, Observation 2).  Latencies come
+from Table 1 constants.
+"""
+from __future__ import annotations
+
+from repro.core import schedule as sched
+from repro.core import simulator
+from repro.core.hw import CXL_POOL, MiB
+
+SIZES = [1 * MiB, 4 * MiB, 16 * MiB, 64 * MiB, 256 * MiB, 1024 * MiB]
+
+
+def single_stream_bw(size: int) -> float:
+    """One server writing `size` bytes to one device (exclusive)."""
+    t = CXL_POOL.memcpy_overhead + size / min(CXL_POOL.device_bw,
+                                              CXL_POOL.server_bw)
+    return size / t
+
+
+def concurrent_bw(size: int, n_servers: int) -> float:
+    """Per-server bandwidth when n servers hit the SAME device
+    (Observation 2: even sharing)."""
+    share = CXL_POOL.device_bw / n_servers
+    t = CXL_POOL.memcpy_overhead + size / min(share, CXL_POOL.server_bw)
+    return size / t
+
+
+def run(emit) -> None:
+    emit("fig3a_single_bw_1MiB", single_stream_bw(1 * MiB) / 1e9,
+         "GB/s single-stream @1MiB")
+    emit("fig3a_single_bw_1GiB", single_stream_bw(1024 * MiB) / 1e9,
+         "GB/s single-stream @1GiB (paper ~20)")
+    for n in (2, 3):
+        emit(f"fig3bc_concurrent_bw_{n}srv_256MiB",
+             concurrent_bw(256 * MiB, n) / 1e9,
+             f"GB/s per server, {n} servers on one device "
+             f"(paper: ~{20 / n:.1f})")
+    emit("tab1_latency_ratio",
+         CXL_POOL.access_latency / CXL_POOL.dram_latency,
+         "pool/DRAM latency ratio (paper 3.1x)")

@@ -1,0 +1,50 @@
+"""Fig. 9: the 8 collective primitives, CXL-CCL-{All,Aggregate,Naive} vs
+NCCL-over-InfiniBand, 3 nodes, message sizes 1 MB - 4 GB.
+
+Emits per-primitive mean speedups (the paper's headline numbers) and the
+full per-size table.  The validation test (tests/test_paper_claims.py)
+asserts the means sit within tolerance of Sec. 5.2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ibmodel, simulator
+from repro.core.hw import MiB
+
+SIZES = [1 * MiB, 4 * MiB, 16 * MiB, 64 * MiB, 256 * MiB, 1024 * MiB,
+         4096 * MiB]
+NRANKS = 3
+
+PAPER_MEANS = {
+    "all_gather": 1.34, "broadcast": 1.84, "gather": 1.94,
+    "scatter": 1.07, "all_reduce": 1.50, "reduce_scatter": 1.43,
+    "reduce": 1.70, "all_to_all": 1.53,
+}
+
+
+def table(primitive: str) -> dict:
+    rows = []
+    for size in SIZES:
+        t_all = simulator.run_variant("all", primitive, NRANKS,
+                                      size).total_time
+        t_agg = simulator.run_variant("aggregate", primitive, NRANKS,
+                                      size).total_time
+        t_nai = simulator.run_variant("naive", primitive, NRANKS,
+                                      size).total_time
+        t_ib = ibmodel.estimate(primitive, NRANKS, size).time
+        rows.append(dict(size=size, all=t_all, aggregate=t_agg,
+                         naive=t_nai, ib=t_ib, speedup=t_ib / t_all))
+    return {"rows": rows,
+            "mean_speedup": float(np.mean([r["speedup"] for r in rows])),
+            "paper_mean": PAPER_MEANS[primitive]}
+
+
+def run(emit) -> None:
+    for prim, paper in PAPER_MEANS.items():
+        t = table(prim)
+        emit(f"fig9_{prim}_mean_speedup", t["mean_speedup"],
+             f"vs IB, paper {paper}")
+        emit(f"fig9_{prim}_naive_ratio_1GiB",
+             t["rows"][5]["naive"] / t["rows"][5]["all"],
+             "All speedup over Naive @1GiB")

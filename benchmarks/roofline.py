@@ -1,0 +1,142 @@
+"""Roofline analysis over the dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs_per_chip / 197 TF/s          (bf16 MXU peak)
+  memory     = HLO_bytes_per_chip / 819 GB/s          (HBM)
+  collective = wire_bytes_per_chip / (2 x 50 GB/s)    (one bidirectional
+               ICI link pair serves a ring over one mesh axis)
+
+plus MODEL_FLOPS (6*N*D training, 2*N*D inference; N_active for MoE) and
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPs, which surfaces
+remat recompute, padding waste and redundant work.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.roofline [--dir experiments/dryrun]
+      [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.core.hw import TPU_V5E
+from repro.launch.dryrun import SHAPES
+
+LINK_BW = 2 * TPU_V5E.ici_bw      # both directions of one link pair
+
+
+def mesh_info(mesh_name: str) -> tuple:
+    """'pod16x16'/'pod2x16x16'/'pod<DP>x<TP>' -> (chips, tp)."""
+    parts = mesh_name[3:].split("x")
+    if len(parts) == 3:
+        return 512, int(parts[2])
+    dp, tp = int(parts[0]), int(parts[1])
+    return dp * tp, tp
+
+
+def model_flops_per_chip(rec: dict) -> float:
+    cfg = get_config(rec["arch"])
+    info = SHAPES[rec["shape"]]
+    chips, _ = mesh_info(rec["mesh"])
+    if info["kind"] == "train":
+        tokens = info["seq_len"] * info["global_batch"]
+        n = rec["active_params"]
+        return 6.0 * n * tokens / chips
+    if info["kind"] == "prefill":
+        tokens = info["seq_len"] * info["global_batch"]
+        return 2.0 * rec["active_params"] * tokens / chips
+    # decode: one token per sequence
+    tokens = info["global_batch"]
+    return 2.0 * rec["active_params"] * tokens / chips
+
+
+def terms(rec: dict) -> dict:
+    """Roofline terms.  FLOPs/bytes come from the analytic cost model and
+    collective bytes from the trace-time ledger - both are exact w.r.t.
+    scan trip counts, which XLA's cost_analysis/HLO text count only once
+    (the raw compiled-artifact numbers stay in the record and in
+    EXPERIMENTS.md §Dry-run as evidence + cross-check)."""
+    from benchmarks.analytic_cost import step_cost
+    chips, tp = mesh_info(rec["mesh"])
+    cost = step_cost(rec["arch"], SHAPES[rec["shape"]], chips, tp=tp)
+    wire = rec.get("ledger", rec["collectives"])["total_wire_bytes"]
+    t_c = cost.flops / TPU_V5E.peak_flops_bf16
+    t_m = cost.bytes / TPU_V5E.hbm_bw
+    t_x = wire / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m),
+              ("collective", t_x), key=lambda kv: kv[1])[0]
+    mf = model_flops_per_chip(rec)
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom, "model_flops": mf,
+            "useful_ratio": mf / cost.flops if cost.flops else 0.0,
+            "bound_s": max(t_c, t_m, t_x),
+            "hlo_flops": rec["cost"].get("flops", 0.0),
+            "hlo_bytes": rec["cost"].get("bytes accessed", 0.0)}
+
+
+SUGGESTION = {
+    "compute": ("drop padded-head/expert waste or lower remat recompute "
+                "(raise microbatch, selective checkpointing)"),
+    "memory": ("fuse elementwise chains / keep activations bf16; for "
+               "decode, shrink or quantize the KV cache reads"),
+    "collective": ("shrink wire bytes: two_phase AllReduce, sequence-"
+                   "parallel activations instead of full AllReduces, "
+                   "overlap via chunked schedules"),
+}
+
+
+def load(dir_: str, backend: str = "ring") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, f"*_{backend}.json"))):
+        r = json.load(open(f))
+        if r["status"] == "ok":
+            r["terms"] = terms(r)
+            recs.append(r)
+    return recs
+
+
+def markdown_table(recs: list[dict], mesh: str) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | "
+        "bottleneck | useful FLOPs | next lever |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.2e} | "
+            f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+            f"**{t['dominant']}** | {t['useful_ratio']:.2f} | "
+            f"{SUGGESTION[t['dominant']]} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--backend", default="ring")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir, args.backend)
+    if args.markdown:
+        print(markdown_table(recs, "pod16x16"))
+        return
+    print(f"{'arch':22s} {'shape':12s} {'mesh':10s} {'compute':>9s} "
+          f"{'memory':>9s} {'collectv':>9s} {'bound':>10s} {'useful':>7s}")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                         r["mesh"])):
+        t = r["terms"]
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:10s} "
+              f"{t['compute_s']:9.2e} {t['memory_s']:9.2e} "
+              f"{t['collective_s']:9.2e} {t['dominant']:>10s} "
+              f"{t['useful_ratio']:7.2f}")
+
+
+if __name__ == "__main__":
+    main()

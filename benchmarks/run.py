@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,notes`` CSV.  Modules:
+  fig3  - pool characterization (Fig. 3, Table 1, Obs. 1-2)
+  fig9  - 8 collectives vs IB + internal variants (Fig. 9)
+  fig10 - scalability 3/6/12 nodes (Fig. 10)
+  fig11 - slicing-factor sensitivity (Fig. 11)
+  llm   - FSDP Llama-3-8B case study (Sec. 5.5)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig3_characterization, fig9_collectives,
+                        fig10_scalability, fig11_chunks, llm_case_study)
+
+MODULES = [
+    ("fig3", fig3_characterization),
+    ("fig9", fig9_collectives),
+    ("fig10", fig10_scalability),
+    ("fig11", fig11_chunks),
+    ("llm", llm_case_study),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,value,notes")
+
+    def emit(name, value, notes=""):
+        v = f"{value:.4f}" if isinstance(value, float) else str(value)
+        print(f"{name},{v},{notes}")
+
+    for key, mod in MODULES:
+        if only and key != only:
+            continue
+        t0 = time.time()
+        mod.run(emit)
+        emit(f"{key}_wall_s", time.time() - t0, "benchmark wall time")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Interactive collective explorer: sweep any primitive across message
+sizes, node counts, slicing factors and implementation variants - the
+tool we used for the Sec. 5.4-style sensitivity studies.
+
+Usage:
+  PYTHONPATH=src python examples/collective_bench.py \
+      --primitive all_to_all --nodes 3 6 12 --sizes 64 256 1024
+"""
+import argparse
+
+from repro.core import ibmodel, simulator
+from repro.core.hw import MiB
+from repro.core.schedule import PRIMITIVES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--primitive", choices=PRIMITIVES,
+                    default="all_gather")
+    ap.add_argument("--nodes", type=int, nargs="+", default=[3])
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[16, 256, 1024], help="MiB")
+    ap.add_argument("--slicing", type=int, default=4)
+    args = ap.parse_args()
+
+    print(f"{'nodes':>5} {'size':>7} {'all':>10} {'aggregate':>10} "
+          f"{'naive':>10} {'IB-200':>10} {'speedup':>8}")
+    for n in args.nodes:
+        for mb in args.sizes:
+            size = mb * MiB
+            r = {v: simulator.run_variant(
+                v, args.primitive, n, size,
+                slicing_factor=args.slicing).total_time
+                for v in ("all", "aggregate", "naive")}
+            ib = ibmodel.estimate(args.primitive, n, size).time
+            print(f"{n:>5} {mb:>5}MB "
+                  f"{r['all'] * 1e3:>8.2f}ms {r['aggregate'] * 1e3:>8.2f}ms "
+                  f"{r['naive'] * 1e3:>8.2f}ms {ib * 1e3:>8.2f}ms "
+                  f"{ib / r['all']:>7.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: the CXL-CCL core in three acts.
+
+1. Run a collective through the functional pool emulation (the paper's
+   Listing 2/3 data path, byte-for-byte).
+2. Price the same collective with the calibrated performance simulator
+   and compare against the NCCL-over-InfiniBand model (Fig. 9).
+3. Run the deployable mesh backend (chunked ppermute schedules) inside
+   shard_map on this host's devices.
+
+Usage: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import ibmodel, pool, simulator
+from repro.core.hw import MiB
+
+
+def main() -> None:
+    # --- 1. functional pool emulation --------------------------------
+    nranks = 3
+    x = np.random.default_rng(0).standard_normal(
+        (nranks, 6000)).astype(np.float32)
+    out = pool.run_collective("all_gather", x)
+    assert out.shape == (nranks, nranks * 6000)
+    np.testing.assert_array_equal(out[0].reshape(nranks, -1), x)
+    print("pool emulation: AllGather through the CXL pool is exact; "
+          "no overlapping writes, no doorbell deadlocks")
+
+    # --- 2. performance simulation vs InfiniBand ---------------------
+    print(f"\n{'size':>8} {'CXL-All':>10} {'CXL-Naive':>10} "
+          f"{'IB-200':>10} {'speedup':>8}")
+    for size in (16 * MiB, 256 * MiB, 1024 * MiB):
+        t_all = simulator.run_variant("all", "all_gather", nranks,
+                                      size).total_time
+        t_nai = simulator.run_variant("naive", "all_gather", nranks,
+                                      size).total_time
+        t_ib = ibmodel.estimate("all_gather", nranks, size).time
+        print(f"{size // MiB:>6}MB {t_all * 1e3:>8.2f}ms "
+              f"{t_nai * 1e3:>8.2f}ms {t_ib * 1e3:>8.2f}ms "
+              f"{t_ib / t_all:>7.2f}x")
+
+    # --- 3. the deployable mesh backend -------------------------------
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.core.api import Communicator
+
+    n = jax.device_count()
+    if n > 1:
+        mesh = jax.make_mesh((n,), ("x",))
+        comm = Communicator(backend="cxl", slicing_factor=4)
+        y = np.random.default_rng(1).standard_normal(
+            (n * 8, 4)).astype(np.float32)
+        f = jax.jit(jax.shard_map(
+            lambda a: comm.all_reduce(a, "x"), mesh=mesh,
+            in_specs=P("x"), out_specs=P("x"), check_vma=False))
+        np.testing.assert_allclose(
+            np.asarray(f(y)).reshape(n, 8, 4),
+            np.tile(y.reshape(n, 8, 4).sum(0), (n, 1, 1)), rtol=1e-4)
+        print(f"\nmesh backend: cxl-scheduled AllReduce exact on "
+              f"{n} devices")
+    else:
+        print("\nmesh backend: single device visible - run with "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              "to see the chunked ppermute schedules execute")
+
+
+if __name__ == "__main__":
+    main()

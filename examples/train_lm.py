@@ -1,0 +1,77 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps on synthetic data, checkpointing as it goes.
+
+The communication backend is selectable exactly like the production
+launcher: with >1 visible device the step runs TP+FSDP inside shard_map
+with every collective routed through CXL-CCL.
+
+Usage:
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/train_lm.py --steps 50 \
+      --backend cxl --tp 4 --dp 2
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import SyntheticTokens, make_batch_specs
+from repro.models import model
+from repro.models.config import ModelConfig, dense_pattern
+from repro.optim import adamw_init
+from repro.training import checkpoint
+from repro.training.train_loop import (TrainConfig, make_sharded_train_step,
+                                       train)
+
+# ~100M params: 12 layers, d_model 768 (gpt2-small scale, llama anatomy)
+CFG_100M = ModelConfig(
+    name="llama-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32000,
+    layer_pattern=dense_pattern(12), source="examples/train_lm.py")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--backend", choices=["ring", "cxl"], default="ring")
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} ({n_params / 1e6:.1f}M params), "
+          f"backend={args.backend}")
+    tcfg = TrainConfig(lr=args.lr, warmup=20, total_steps=args.steps,
+                      backend=args.backend)
+    data = iter(SyntheticTokens(cfg, batch=args.batch, seq=args.seq))
+
+    if args.tp * args.dp > 1:
+        mesh = jax.make_mesh((args.dp, args.tp), ("data", "model"))
+        step, pspecs, bspecs, pc = make_sharded_train_step(
+            cfg, tcfg, mesh, dp_axis=("data",))
+        params = model.init_params(jax.random.key(0), cfg, tp=args.tp,
+                                   dtype=jnp.float32)
+        opt = adamw_init(params)
+        t0 = time.time()
+        for i, batch in zip(range(args.steps), data):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt, metrics = step(params, opt, batch)
+            if i % 20 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
+                      f"({time.time() - t0:.1f}s)")
+    else:
+        params, opt, metrics = train(cfg, tcfg, data, steps=args.steps,
+                                     log_every=20)
+    checkpoint.save(args.ckpt, args.steps, {"params": params})
+    print(f"checkpoint written to {args.ckpt}/step_{args.steps:08d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Architecture registry: the 10 assigned configs + the paper's case-study
+model, selectable via ``--arch <id>``.
+
+Each ``src/repro/configs/<id>.py`` module exports ``CONFIG`` (the exact
+published dimensions, cited) and ``SMOKE`` (a reduced same-family variant:
+<=2-4 layers, d_model <= 512, <= 4 experts) used by the per-arch CPU smoke
+tests.  Full configs are exercised only through the dry-run
+(ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "phi-3-vision-4.2b": "phi3_vision_4p2b",
+    "arctic-480b": "arctic_480b",
+    "whisper-tiny": "whisper_tiny",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "yi-6b": "yi_6b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "llama3.2-1b": "llama3p2_1b",
+    # paper Sec. 5.5 case-study model
+    "llama3-8b": "llama3_8b",
+}
+
+ARCH_IDS = [k for k in _MODULES if k != "llama3-8b"]
+ALL_IDS = list(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ALL_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.SMOKE if smoke else mod.CONFIG

@@ -1,0 +1,20 @@
+"""Falcon-Mamba-7B: pure Mamba-1, attention-free [arXiv:2410.05355]."""
+from repro.models.config import ModelConfig, SSMConfig, ssm_pattern
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab_size=65024,
+    layer_pattern=ssm_pattern(64, version=1),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, version=1),
+    source="arXiv:2410.05355",
+)
+
+SMOKE = ModelConfig(
+    name="falcon-mamba-smoke", family="ssm",
+    n_layers=2, d_model=256, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab_size=512,
+    layer_pattern=ssm_pattern(2, version=1),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, version=1),
+    source="reduced falcon-mamba family",
+)

@@ -1,0 +1,180 @@
+"""Communicator: the framework-facing API of the CXL-CCL reproduction.
+
+Every collective in the training/serving stack goes through a
+``Communicator`` so the backend is swappable:
+
+* ``ring`` - ``jax.lax`` built-ins (what XLA/NCCL would do; the baseline).
+* ``cxl``  - the paper's schedules realized as chunked ppermute rounds
+             (``core.mesh_collectives``), with the slicing factor and the
+             faithful-vs-two-phase AllReduce both selectable.
+
+Axes may be a single name or a tuple (e.g. ``("pod", "data")`` for the
+multi-pod FSDP axis); tuple axes are handled hierarchically, innermost
+axis first - on the real cluster that is "within the rack-scale CXL pool
+first, across pods second", matching the paper's expectation that one pool
+spans a small number of nodes (Sec. 5.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ledger
+from repro.core import mesh_collectives as mc
+
+AxisSpec = Union[str, Sequence[str]]
+
+BACKENDS = ("ring", "cxl")
+
+
+def _axes(axis: AxisSpec) -> tuple[str, ...]:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class Communicator:
+    backend: str = "ring"
+    slicing_factor: int = mc.DEFAULT_CHUNKS
+    allreduce_mode: str = "two_phase"   # 'faithful' reproduces Sec. 5.2
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}")
+        if self.allreduce_mode not in ("faithful", "two_phase"):
+            raise ValueError("allreduce_mode: 'faithful' or 'two_phase'")
+
+    # -- N->N primitives (the FSDP / TP / MoE hot path) ------------------
+
+    def all_reduce(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
+        s = ledger.nbytes(x)
+        for ax in _axes(axis):
+            n = lax.axis_size(ax)
+            wire = s * (n - 1) if self.allreduce_mode == "faithful" and \
+                self.backend == "cxl" else 2 * s * (n - 1) / n
+            ledger.record("all_reduce", wire)
+        if self.backend == "ring":
+            return lax.psum(x, axis if isinstance(axis, str)
+                            else tuple(axis))
+        out = x
+        for ax in _axes(axis):  # innermost (pool-local) axis first
+            out = mc.all_reduce(out, ax, mode=self.allreduce_mode,
+                                n_chunks=self.slicing_factor)
+        return out
+
+    def all_gather(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
+        """Tiled gather along axis 0, rank-major over the (possibly
+        hierarchical) axis spec: outer axis index is most significant."""
+        axes = _axes(axis)
+        out = x
+        # Inner (minor, pool-local) axis first; the outer gather then
+        # stacks whole pool-level blocks, matching P((outer, inner)) layout.
+        for ax in reversed(axes):
+            n = lax.axis_size(ax)
+            ledger.record("all_gather", ledger.nbytes(out) * (n - 1))
+            if self.backend == "ring":
+                out = lax.all_gather(out, ax, tiled=True)
+            else:
+                out = mc.all_gather(out, ax,
+                                    n_chunks=self.slicing_factor)
+        return out
+
+    def reduce_scatter(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
+        """Reduce-scatter along axis 0, the inverse layout of all_gather
+        (outer axis most significant)."""
+        axes = _axes(axis)
+        out = x
+        for ax in axes:  # outer axis first: inverse of gather
+            n = lax.axis_size(ax)
+            ledger.record("reduce_scatter",
+                          ledger.nbytes(out) * (n - 1) / n)
+            if self.backend == "ring":
+                out = lax.psum_scatter(out, ax, scatter_dimension=0,
+                                       tiled=True)
+            else:
+                out = mc.reduce_scatter(out, ax,
+                                        n_chunks=self.slicing_factor)
+        return out
+
+    def all_to_all(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
+        axes = _axes(axis)
+        if len(axes) != 1:
+            raise NotImplementedError("all_to_all is single-axis")
+        ax = axes[0]
+        n_ = lax.axis_size(ax)
+        ledger.record("all_to_all", ledger.nbytes(x) * (n_ - 1) / n_)
+        if self.backend == "ring":
+            n = lax.axis_size(ax)
+            if x.shape[0] % n:
+                raise ValueError("leading dim must divide axis size")
+            segs = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+            out = lax.all_to_all(segs, ax, split_axis=0, concat_axis=0,
+                                 tiled=False)
+            return out.reshape(x.shape)
+        return mc.all_to_all(x, ax, n_chunks=self.slicing_factor)
+
+    # -- rooted primitives ------------------------------------------------
+
+    def broadcast(self, x: jnp.ndarray, axis: AxisSpec,
+                  root: int = 0) -> jnp.ndarray:
+        axes = _axes(axis)
+        if len(axes) != 1:
+            raise NotImplementedError("broadcast is single-axis")
+        ax = axes[0]
+        ledger.record("broadcast", ledger.nbytes(x))
+        if self.backend == "ring":
+            idx = lax.axis_index(ax)
+            masked = jnp.where(idx == root, x, jnp.zeros_like(x))
+            return lax.psum(masked, ax)
+        return mc.broadcast(x, ax, root=root, n_chunks=self.slicing_factor)
+
+    def reduce(self, x: jnp.ndarray, axis: AxisSpec,
+               root: int = 0) -> jnp.ndarray:
+        axes = _axes(axis)
+        if len(axes) != 1:
+            raise NotImplementedError("reduce is single-axis")
+        ax = axes[0]
+        n_ = lax.axis_size(ax)
+        ledger.record("reduce", 2 * ledger.nbytes(x) * (n_ - 1) / n_)
+        if self.backend == "ring":
+            idx = lax.axis_index(ax)
+            total = lax.psum(x, ax)
+            return jnp.where(idx == root, total, jnp.zeros_like(total))
+        return mc.reduce(x, ax, root=root, n_chunks=self.slicing_factor)
+
+    def gather(self, x: jnp.ndarray, axis: AxisSpec,
+               root: int = 0) -> jnp.ndarray:
+        axes = _axes(axis)
+        if len(axes) != 1:
+            raise NotImplementedError("gather is single-axis")
+        ax = axes[0]
+        n_ = lax.axis_size(ax)
+        ledger.record("gather", ledger.nbytes(x) * (n_ - 1))
+        if self.backend == "ring":
+            idx = lax.axis_index(ax)
+            full = lax.all_gather(x, ax, tiled=True)
+            return jnp.where(idx == root, full, jnp.zeros_like(full))
+        return mc.gather(x, ax, root=root, n_chunks=self.slicing_factor)
+
+    def scatter(self, x: jnp.ndarray, axis: AxisSpec,
+                root: int = 0) -> jnp.ndarray:
+        axes = _axes(axis)
+        if len(axes) != 1:
+            raise NotImplementedError("scatter is single-axis")
+        ax = axes[0]
+        if self.backend == "ring":
+            n = lax.axis_size(ax)
+            idx = lax.axis_index(ax)
+            rooted = self.broadcast(x, ax, root=root)
+            segs = rooted.reshape((n, x.shape[0] // n) + x.shape[1:])
+            return lax.dynamic_index_in_dim(segs, idx, 0, keepdims=False)
+        return mc.scatter(x, ax, root=root, n_chunks=self.slicing_factor)
+
+
+def make_communicator(backend: str = "ring", *, slicing_factor: int = 4,
+                      allreduce_mode: str = "two_phase") -> Communicator:
+    return Communicator(backend=backend, slicing_factor=slicing_factor,
+                        allreduce_mode=allreduce_mode)

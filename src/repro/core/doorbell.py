@@ -1,0 +1,86 @@
+"""Doorbell synchronization (paper Sec. 4.5, Fig. 8, Listing 3).
+
+Each data chunk has a dedicated semaphore ("doorbell") living in the pool.
+Only the chunk's *owner* (producer) may update it: STALE -> READY after the
+write completes, followed by an explicit flush so other sockets observe the
+change.  Consumers spin: read doorbell; if STALE, invalidate the cached line
+and re-read after a short sleep.
+
+Doorbell *addresses* are derived by pure index calculation against a
+pre-allocated doorbell region (no allocator, no metadata) - that is the
+paper's "lightweight, index-calculation-based" locking mechanism.
+
+This module provides the host-side (Python) state machine used by the
+functional pool emulation and the event-driven simulator.  The TPU mesh
+backend needs no doorbells: data dependence of the ppermute chain enforces
+the same RAW ordering (see DESIGN.md, hardware adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+DOORBELL_BYTES = 64  # one cache line per doorbell
+
+
+class DoorbellState(enum.IntEnum):
+    STALE = 0
+    READY = 1
+
+
+@dataclasses.dataclass
+class DoorbellRegion:
+    """Pre-allocated doorbell buffer at the base of the pool address space.
+
+    ``capacity`` is the number of doorbell entries.  The region occupies
+    ``capacity * DOORBELL_BYTES`` bytes (= ``DB_offset`` in Eq. 3).
+    """
+
+    capacity: int
+    _states: list[int] = dataclasses.field(default_factory=list)
+    # Telemetry for tests / the simulator.
+    rings: int = 0
+    polls: int = 0
+    flushes: int = 0
+
+    def __post_init__(self) -> None:
+        if self.capacity <= 0:
+            raise ValueError("doorbell capacity must be positive")
+        self._states = [DoorbellState.STALE] * self.capacity
+
+    @property
+    def region_bytes(self) -> int:
+        return self.capacity * DOORBELL_BYTES
+
+    def address(self, index: int) -> int:
+        """Index-calculated doorbell address (no metadata lookup)."""
+        self._check(index)
+        return index * DOORBELL_BYTES
+
+    def ring(self, index: int) -> None:
+        """Producer: mark READY and flush (Listing 3 lines 5-7)."""
+        self._check(index)
+        self._states[index] = DoorbellState.READY
+        self.rings += 1
+        self.flushes += 1  # explicit flush for cross-socket visibility
+
+    def is_ready(self, index: int) -> bool:
+        """Consumer poll: invalidate + re-read (Listing 3 lines 9-13)."""
+        self._check(index)
+        self.polls += 1
+        self.flushes += 1  # cache-line invalidation before the re-read
+        return self._states[index] == DoorbellState.READY
+
+    def reset(self, index: int) -> None:
+        """Owner resets the doorbell for buffer reuse between collectives."""
+        self._check(index)
+        self._states[index] = DoorbellState.STALE
+
+    def reset_all(self) -> None:
+        for i in range(self.capacity):
+            self._states[i] = DoorbellState.STALE
+
+    def _check(self, index: int) -> None:
+        if not 0 <= index < self.capacity:
+            raise IndexError(
+                f"doorbell index {index} out of range [0, {self.capacity})")

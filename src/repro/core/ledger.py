@@ -1,0 +1,59 @@
+"""Trace-time collective-bytes ledger.
+
+XLA's ``cost_analysis``/HLO text count a ``lax.scan`` body ONCE, so any
+per-layer or per-microbatch collective is undercounted by its trip count
+in the compiled artifact.  The Communicator therefore records the wire
+bytes of every collective *at trace time* (shapes are static), and the
+model/trainer wrap scanned regions in ``ledger.scale(trip_count)`` so the
+ledger accumulates the true per-step totals.  The dry-run snapshots the
+ledger after ``.lower()`` (tracing is enough - nothing must execute).
+
+Wire-byte convention (per chip, ring algorithms over an axis of size n,
+local payload s bytes):
+    all_gather      s * (n-1)
+    reduce_scatter  s * (n-1) / n
+    all_reduce      2 * s * (n-1) / n   (faithful mode: s * (n-1))
+    all_to_all      s * (n-1) / n
+    broadcast       s                    (pipelined forward)
+"""
+from __future__ import annotations
+
+import contextlib
+from collections import defaultdict
+
+_BYTES: dict = defaultdict(float)
+_COUNTS: dict = defaultdict(int)
+_MULT: list = [1.0]
+
+
+def reset() -> None:
+    _BYTES.clear()
+    _COUNTS.clear()
+    _MULT[:] = [1.0]
+
+
+@contextlib.contextmanager
+def scale(mult: float):
+    """Everything recorded inside runs ``mult`` times at run time."""
+    _MULT.append(_MULT[-1] * mult)
+    try:
+        yield
+    finally:
+        _MULT.pop()
+
+
+def record(kind: str, wire_bytes: float) -> None:
+    _BYTES[kind] += wire_bytes * _MULT[-1]
+    _COUNTS[kind] += 1
+
+
+def snapshot() -> dict:
+    return {"wire_bytes": dict(_BYTES), "counts": dict(_COUNTS),
+            "total_wire_bytes": float(sum(_BYTES.values()))}
+
+
+def nbytes(x) -> int:
+    size = 1
+    for d in x.shape:
+        size *= int(d)
+    return size * x.dtype.itemsize

@@ -1,0 +1,225 @@
+"""TPU-mesh realizations of the CXL-CCL collective schedules.
+
+On a TPU pod there is no shared memory pool; the paper's insight maps onto
+ICI as follows (DESIGN.md, "hardware adaptation"):
+
+* Eq. 4's disjoint-device ownership ≙ each rank's shard living in its own
+  HBM; the read rotation "start from (rank_id+1) % nranks" (Fig. 6) is
+  exactly a ring schedule - at every step all ranks pull a *different*
+  peer's chunk, so every ICI link carries traffic every step.  We realize
+  it with unrolled ``lax.ppermute`` rounds.
+* The slicing-factor chunking of Sec. 4.4 becomes per-chunk ppermute
+  rounds: communication of chunk k+1 overlaps the consumer-side compute
+  (reduction) of chunk k.  XLA schedules these as async collectives.
+* Doorbells are unnecessary: SSA data dependence of the ppermute chain
+  enforces the producer->consumer (RAW) ordering the doorbell protects.
+
+Everything here must be called inside ``shard_map`` with the named axis.
+
+The paper-faithful AllReduce reads *all* peers' data and reduces locally
+(no partial-result reuse - Sec. 5.2 explains why theirs only reaches 1.05x
+on large messages).  ``all_reduce(..., mode='faithful')`` reproduces that;
+``mode='two_phase'`` is the beyond-paper reduce_scatter + all_gather
+composition (wire bytes 2S(n-1)/n instead of S(n-1) per rank).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+DEFAULT_CHUNKS = 4
+
+
+def _ring_perm(n: int, shift: int = 1) -> list[tuple[int, int]]:
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def _split_chunks(x: jnp.ndarray, n_chunks: int) -> list[jnp.ndarray]:
+    """Split along axis 0 (the paper's slicing factor).  Falls back to a
+    single chunk when the leading dim does not divide."""
+    lead = x.shape[0] if x.ndim else 1
+    if n_chunks <= 1 or x.ndim == 0 or lead % n_chunks:
+        return [x]
+    return list(jnp.split(x, n_chunks, axis=0))
+
+
+def all_gather(x: jnp.ndarray, axis_name: str,
+               n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """Chunked ring all-gather; returns shards concatenated along axis 0 in
+    rank order (``tiled=True`` semantics)."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    perm = _ring_perm(n)
+    chunks = _split_chunks(x, n_chunks)
+    gathered = []
+    for c in chunks:
+        out = jnp.zeros((n,) + c.shape, c.dtype)
+        out = lax.dynamic_update_index_in_dim(out, c, idx, 0)
+        cur = c
+        for step in range(1, n):
+            # After `step` hops my copy of `cur` originated at idx - step.
+            cur = lax.ppermute(cur, axis_name, perm)
+            src = (idx - step) % n
+            out = lax.dynamic_update_index_in_dim(out, cur, src, 0)
+        gathered.append(out)
+    # Re-interleave chunk rows back into rank-major order.
+    parts = [jnp.concatenate([g[r] for g in gathered], axis=0)
+             for r in range(n)]
+    return jnp.concatenate(parts, axis=0)
+
+
+def reduce_scatter(x: jnp.ndarray, axis_name: str,
+                   n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """Chunked ring reduce-scatter over axis 0 (``scatter_dimension=0``):
+    rank r returns ``sum_ranks(x)[r*seg:(r+1)*seg]``."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    if x.shape[0] % n:
+        raise ValueError(f"leading dim {x.shape[0]} must divide axis {n}")
+    idx = lax.axis_index(axis_name)
+    perm = _ring_perm(n)
+    segs = jnp.reshape(x, (n, x.shape[0] // n) + x.shape[1:])
+
+    # Partial for segment s starts at rank s+1; after t hops it sits at
+    # rank r = s + 1 + t and absorbs that rank's segment s = r - t - 1.
+    acc = lax.dynamic_index_in_dim(segs, (idx - 1) % n, 0, keepdims=False)
+    acc_chunks = _split_chunks(acc, n_chunks)
+    for t in range(1, n):
+        local = lax.dynamic_index_in_dim(segs, (idx - t - 1) % n, 0,
+                                         keepdims=False)
+        local_chunks = _split_chunks(local, n_chunks)
+        acc_chunks = [lax.ppermute(a, axis_name, perm) + l
+                      for a, l in zip(acc_chunks, local_chunks)]
+    return jnp.concatenate(acc_chunks, axis=0) if len(acc_chunks) > 1 \
+        else acc_chunks[0]
+
+
+def all_reduce(x: jnp.ndarray, axis_name: str, *, mode: str = "two_phase",
+               n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """AllReduce over the named axis.
+
+    ``faithful``  - the paper's algorithm: gather every peer's full buffer
+                    (ring) and reduce locally; wire bytes S(n-1) per rank.
+    ``two_phase`` - reduce_scatter + all_gather; wire bytes 2S(n-1)/n.
+    """
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    if mode == "faithful":
+        perm = _ring_perm(n)
+        chunks = _split_chunks(x, n_chunks)
+        out_chunks = []
+        for c in chunks:
+            acc = c
+            cur = c
+            for _ in range(1, n):
+                cur = lax.ppermute(cur, axis_name, perm)
+                acc = acc + cur
+            out_chunks.append(acc)
+        return jnp.concatenate(out_chunks, axis=0) if len(out_chunks) > 1 \
+            else out_chunks[0]
+    if mode == "two_phase":
+        orig_shape = x.shape
+        flat = x.reshape(-1)
+        pad = (-flat.shape[0]) % n
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        seg = reduce_scatter(flat, axis_name, n_chunks=n_chunks)
+        full = all_gather(seg, axis_name, n_chunks=n_chunks)
+        if pad:
+            full = full[:-pad]
+        return full.reshape(orig_shape)
+    raise ValueError(f"unknown all_reduce mode {mode!r}")
+
+
+def all_to_all(x: jnp.ndarray, axis_name: str,
+               n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """Rotation-scheduled all-to-all over axis 0: segment p of the result
+    is rank p's segment ``my_rank``.  Mirrors the paper's AllToAll where
+    rank r publishes segment ``dest`` starting from ``(r+1) % nranks``:
+    rotation ``s`` exchanges data between ranks at ring distance ``s``."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    if x.shape[0] % n:
+        raise ValueError(f"leading dim {x.shape[0]} must divide axis {n}")
+    idx = lax.axis_index(axis_name)
+    segs = jnp.reshape(x, (n, x.shape[0] // n) + x.shape[1:])
+    out = jnp.zeros_like(segs)
+    own = lax.dynamic_index_in_dim(segs, idx, 0, keepdims=False)
+    out = lax.dynamic_update_index_in_dim(out, own, idx, 0)
+    for s in range(1, n):
+        perm = _ring_perm(n, shift=s)
+        # I send my segment for rank (idx+s); I receive from rank (idx-s)
+        # its segment destined to me.
+        send = lax.dynamic_index_in_dim(segs, (idx + s) % n, 0,
+                                        keepdims=False)
+        recv_chunks = [lax.ppermute(c, axis_name, perm)
+                       for c in _split_chunks(send, n_chunks)]
+        recv = jnp.concatenate(recv_chunks, axis=0) \
+            if len(recv_chunks) > 1 else recv_chunks[0]
+        out = lax.dynamic_update_index_in_dim(out, recv, (idx - s) % n, 0)
+    return out.reshape(x.shape)
+
+
+def broadcast(x: jnp.ndarray, axis_name: str, root: int = 0,
+              n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """Pipelined ring broadcast from ``root``; chunks stream hop-by-hop so
+    link utilization matches the pool version's chunk overlap."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    dist = (idx - root) % n
+    perm = _ring_perm(n)
+    out_chunks = []
+    for c in _split_chunks(x, n_chunks):
+        cur = c
+        out = jnp.where(dist == 0, c, jnp.zeros_like(c))
+        for step in range(1, n):
+            cur = lax.ppermute(cur, axis_name, perm)
+            out = jnp.where(dist == step, cur, out)
+            cur = jnp.where(dist == step, out, cur)  # forward my copy
+        out_chunks.append(out)
+    return jnp.concatenate(out_chunks, axis=0) if len(out_chunks) > 1 \
+        else out_chunks[0]
+
+
+def reduce(x: jnp.ndarray, axis_name: str, root: int = 0,
+           n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """Ring reduce-to-root; non-root ranks return zeros."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    total = all_reduce(x, axis_name, mode="two_phase", n_chunks=n_chunks)
+    return jnp.where(idx == root, total, jnp.zeros_like(total))
+
+
+def gather(x: jnp.ndarray, axis_name: str, root: int = 0,
+           n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """Gather-to-root (rank order along axis 0); non-root ranks zeros."""
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    full = all_gather(x, axis_name, n_chunks=n_chunks)
+    return jnp.where(idx == root, full, jnp.zeros_like(full))
+
+
+def scatter(x: jnp.ndarray, axis_name: str, root: int = 0,
+            n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """Scatter from root: rank r receives segment r of root's axis-0."""
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    if x.shape[0] % n:
+        raise ValueError(f"leading dim {x.shape[0]} must divide axis {n}")
+    idx = lax.axis_index(axis_name)
+    rooted = broadcast(x, axis_name, root=root, n_chunks=n_chunks)
+    segs = jnp.reshape(rooted, (n, x.shape[0] // n) + x.shape[1:])
+    return lax.dynamic_index_in_dim(segs, idx, 0, keepdims=False)

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (SyntheticTokens, MemmapCorpus,
+                                 make_batch_specs, batch_for)
+
+__all__ = ["SyntheticTokens", "MemmapCorpus", "make_batch_specs",
+           "batch_for"]

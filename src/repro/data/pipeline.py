@@ -1,0 +1,98 @@
+"""Token data pipeline.
+
+Two sources:
+
+* ``SyntheticTokens`` - deterministic PRNG LM batches (zipf-ish marginal
+  so losses are non-degenerate); used by the examples and benchmarks.
+* ``MemmapCorpus`` - a flat binary token file sampled in windows, the
+  standard "one big .bin" pretraining layout.
+
+Batches are host-built numpy and sharded onto the mesh by the launcher
+(``jax.device_put`` with a ``NamedSharding`` over the dp axis).  Each
+batch dict matches ``model.loss_fn``: tokens, labels (next-token shifted)
+and the modality extras demanded by the architecture's frontend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def make_batch_specs(cfg: ModelConfig, dp_axis) -> dict:
+    specs = {"tokens": P(dp_axis), "labels": P(dp_axis)}
+    if cfg.frontend == "vision_stub" and cfg.encoder is None:
+        specs["frontend"] = P(dp_axis)
+    if cfg.encoder is not None:
+        specs["source"] = P(dp_axis)
+    return specs
+
+
+def batch_for(cfg: ModelConfig, tokens: np.ndarray,
+              rng: Optional[np.random.Generator] = None) -> dict:
+    """tokens (B, L+1) -> training batch with next-token labels and the
+    frontend extras (random stub embeddings)."""
+    rng = rng or np.random.default_rng(0)
+    b = {"tokens": tokens[:, :-1].astype(np.int32),
+         "labels": tokens[:, 1:].astype(np.int32)}
+    n = tokens.shape[0]
+    if cfg.frontend == "vision_stub" and cfg.encoder is None:
+        b["frontend"] = rng.standard_normal(
+            (n, cfg.frontend_tokens, cfg.frontend_dim)).astype(np.float32)
+    if cfg.encoder is not None:
+        b["source"] = rng.standard_normal(
+            (n, cfg.encoder.source_len,
+             cfg.frontend_dim or cfg.d_model)).astype(np.float32)
+    return b
+
+
+@dataclasses.dataclass
+class SyntheticTokens:
+    cfg: ModelConfig
+    batch: int
+    seq: int
+    seed: int = 0
+
+    def __iter__(self) -> Iterator[dict]:
+        rng = np.random.default_rng(self.seed)
+        zipf_p = 1.0 / np.arange(1, self.cfg.vocab_size + 1) ** 1.1
+        zipf_p /= zipf_p.sum()
+        while True:
+            toks = rng.choice(self.cfg.vocab_size,
+                              size=(self.batch, self.seq + 1), p=zipf_p)
+            yield batch_for(self.cfg, toks, rng)
+
+
+@dataclasses.dataclass
+class MemmapCorpus:
+    cfg: ModelConfig
+    path: str
+    batch: int
+    seq: int
+    dtype: str = "uint16"
+    seed: int = 0
+
+    def __post_init__(self):
+        self.tokens = np.memmap(self.path, dtype=self.dtype, mode="r")
+        if len(self.tokens) < self.seq + 1:
+            raise ValueError("corpus shorter than one sample window")
+
+    def __iter__(self) -> Iterator[dict]:
+        rng = np.random.default_rng(self.seed)
+        n = len(self.tokens) - self.seq - 1
+        while True:
+            starts = rng.integers(0, n, size=self.batch)
+            toks = np.stack([np.asarray(
+                self.tokens[s:s + self.seq + 1]) for s in starts])
+            toks = np.minimum(toks.astype(np.int64),
+                              self.cfg.vocab_size - 1)
+            yield batch_for(self.cfg, toks, rng)
+
+
+def write_corpus(path: str, tokens: np.ndarray,
+                 dtype: str = "uint16") -> None:
+    np.asarray(tokens, dtype=dtype).tofile(path)

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernel body runs in Python
+via the Pallas interpreter - our CPU validation mode) and False on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import chunked_reduce as _cr
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssm_scan as _ss
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def chunked_reduce(x: jnp.ndarray, tile: int = _cr.DEFAULT_TILE,
+                   interpret=None) -> jnp.ndarray:
+    interpret = _default_interpret() if interpret is None else interpret
+    return _cr.chunked_reduce(x, tile=tile, interpret=interpret)
+
+
+def flash_attention(q, k, v, causal: bool = True, window=None,
+                    block_q: int = _fa.BLOCK_Q,
+                    block_k: int = _fa.BLOCK_K, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+def ssm_scan(x, dt, a, bs, cs, d_res, block_d: int = _ss.BLOCK_D,
+             block_l: int = _ss.BLOCK_L, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ss.ssm_scan(x, dt, a, bs, cs, d_res, block_d=block_d,
+                        block_l=block_l, interpret=interpret)
+
+
+def rms_norm(x, scale, eps: float = 1e-5, rows: int = _rn.ROW_TILE,
+             interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rn.rms_norm(x, scale, eps=eps, rows=rows,
+                        interpret=interpret)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_reduce_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """(n_src, length) -> (length,) sum with f32 accumulation."""
+    return jnp.sum(x.astype(jnp.float32), axis=0).astype(x.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window=None) -> jnp.ndarray:
+    """(BH, L, D) plain softmax attention."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    lq, lk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(lq)[:, None]
+    kpos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)
+
+
+def ssm_scan_ref(x, dt, a, bs, cs, d_res):
+    """Sequential reference for the selective scan (f32 state)."""
+    bsz, l, d = x.shape
+    n = a.shape[1]
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32[..., None] * a[None, None])      # (B, L, D, N)
+    drive = (dt32 * x32)[..., None] * \
+        bs.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, inp):
+        dec, drv, ct = inp
+        h = dec * h + drv
+        y = jnp.sum(h * ct[:, None, :], axis=-1)
+        return h, y
+
+    h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0, (decay.swapaxes(0, 1), drive.swapaxes(0, 1),
+                   cs.astype(jnp.float32).swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + d_res.astype(jnp.float32)[None, None] * x32
+    return y.astype(x.dtype)
+
+
+def rms_norm_ref(x, scale, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps))
+            * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,387 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first init.  REPRO_DRYRUN_DEVICES overrides for local testing.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape x mesh) combination this lowers and
+compiles the real step function - train_step for ``train_4k``, prefill
+for ``prefill_32k``, serve_step (one token against a KV cache) for
+``decode_32k`` / ``long_500k`` - against ShapeDtypeStruct inputs (no
+allocation), prints ``memory_analysis()`` / ``cost_analysis()``, parses
+per-chip collective wire bytes out of the compiled HLO, and writes a JSON
+record for the roofline analysis (EXPERIMENTS.md Sec. Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k [--multi-pod|--both-meshes] \
+      [--backend ring|cxl] [--mesh-shape DPxTP] [--out DIR]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --both-meshes
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.api import Communicator
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import model, sharding
+from repro.models.config import ModelConfig
+from repro.models.pcontext import ParallelContext, UNSHARDED
+from repro.optim import AdamWState
+from repro.training.train_loop import TrainConfig, make_train_step
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+               "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\w-]*\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _result_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-chip wire bytes by collective type, from the partitioned HLO.
+
+    Result-shape bytes are converted to wire bytes with the standard ring
+    cost for the op's group size n (parsed from replica_groups)."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.groups()
+        rb = _result_bytes(dtype, dims)
+        n = None
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_IOTA_RE.search(line)
+            if g2:
+                n = int(g2.group(2))
+        if not n or n < 2:
+            if op == "collective-permute":
+                n = 2  # permute always moves the full payload
+            else:
+                continue
+        if op == "all-gather":
+            wire = rb * (n - 1) / n
+        elif op == "all-reduce":
+            wire = rb * 2 * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = rb * (n - 1)
+        elif op == "all-to-all":
+            wire = rb * (n - 1) / n
+        else:  # collective-permute
+            wire = float(rb)
+        out[op] += wire
+        counts[op] += 1
+    return {"wire_bytes": out, "counts": counts,
+            "total_wire_bytes": sum(out.values())}
+
+
+# --------------------------------------------------------------------- #
+# input builders
+# --------------------------------------------------------------------- #
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_sds(cfg: ModelConfig, batch: int, seq: int) -> tuple:
+    """(batch dict of SDS, specs dict).  Text length shrinks by the
+    frontend prefix for decoder-only stub-frontend models."""
+    text = seq - (cfg.frontend_tokens
+                  if cfg.frontend != "text" and cfg.encoder is None
+                  else 0)
+    b = {"tokens": _sds((batch, text), jnp.int32),
+         "labels": _sds((batch, text), jnp.int32)}
+    if cfg.frontend == "vision_stub" and cfg.encoder is None:
+        b["frontend"] = _sds((batch, cfg.frontend_tokens,
+                              cfg.frontend_dim), jnp.bfloat16)
+    if cfg.encoder is not None:
+        b["source"] = _sds((batch, cfg.encoder.source_len,
+                            cfg.frontend_dim or cfg.d_model), jnp.bfloat16)
+    return b
+
+
+def has_attention(cfg: ModelConfig) -> bool:
+    return any(ch in "ae" for ch in cfg.layer_pattern)
+
+
+def decode_window(cfg: ModelConfig, shape_name: str):
+    """long_500k uses the sliding-window ring buffer for attention rows
+    (SSM rows are O(1) regardless) - see DESIGN.md Arch-applicability."""
+    if shape_name == "long_500k" and has_attention(cfg):
+        return cfg.sliding_window
+    return None
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, dp, batch_sharded: bool,
+                tp: int):
+    """PartitionSpecs for a decode cache pytree (global shapes): KV cache
+    sequence dim and SSM channel dims shard over 'model'; batch over dp.
+    Cross-attention KV shards heads over 'model' when divisible (matching
+    the prefill-produced layout), else replicates."""
+    from jax.tree_util import DictKey, SequenceKey, tree_map_with_path
+    bax = dp if batch_sharded else None
+    v = cfg.ssm.version if cfg.ssm else 0
+    cross_head_ax = "model" if cfg.kv_sharded(tp) else None
+
+    def spec(path, leaf):
+        names = [k.key for k in path if isinstance(k, DictKey)]
+        name = names[-1]
+        r = len(leaf.shape)
+        if name in ("k", "v"):
+            base = P(bax, "model", None, None)
+            return P(*( (None,) * (r - 4) + tuple(base)))
+        if name in ("ck", "cv"):
+            return P(*((None,) * (r - 4)
+                       + (bax, None, cross_head_ax, None)))
+        if name == "conv":
+            return P(*((None,) * (r - 3) + (bax, None, "model")))
+        if name == "conv_bc":
+            return P(*((None,) * (r - 3) + (bax, None, None)))
+        if name == "ssm":
+            base_rank = 3 if v == 1 else 4
+            base = (bax, "model") + (None,) * (base_rank - 2)
+            return P(*((None,) * (r - base_rank) + base))
+        raise ValueError(f"unknown cache leaf {name}")
+    return tree_map_with_path(spec, cache_tree)
+
+
+# --------------------------------------------------------------------- #
+# per-shape lowering
+# --------------------------------------------------------------------- #
+
+def build_lowerable(arch: str, shape_name: str, mesh, backend: str,
+                    allreduce_mode: str = "two_phase"):
+    """Returns (fn_to_lower, example_args) - fn is already jit+shard_map
+    wrapped; args are ShapeDtypeStructs."""
+    cfg = get_config(arch)
+    info = SHAPES[shape_name]
+    seq, gbatch, kind = (info["seq_len"], info["global_batch"],
+                         info["kind"])
+    tp = mesh.shape["model"]
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    sharding.set_mesh_sizes({a: mesh.shape[a] for a in mesh.axis_names})
+    comm = Communicator(backend=backend, allreduce_mode=allreduce_mode)
+    pc = ParallelContext(tp_axis="model", dp_axis=dp_spec, tp=tp,
+                         comm=comm)
+
+    abstract = model.abstract_params(cfg, tp=tp, dtype=jnp.bfloat16)
+
+    if kind == "train":
+        pspecs = sharding.param_specs(abstract, cfg, dp_axis=dp_spec,
+                                      fsdp=True)
+        rspecs = sharding.row_specs(pspecs)
+        gather = sharding.fsdp_gather_fn(rspecs, pc, dp_spec)
+        local_b = gbatch // dp_size
+        mb = max(1, local_b // 2)   # microbatch of 2 sequences per chip
+        tcfg = TrainConfig(remat=True, microbatches=mb, backend=backend,
+                           clip_norm=None)
+        inner = make_train_step(cfg, tcfg, pc, gather_fn=gather,
+                                param_spec_tree=pspecs, dp_axis=dp_spec)
+        batch = batch_sds(cfg, gbatch, seq)
+        bspecs = {k: P(dp_spec) for k in batch}
+        opt = AdamWState(
+            step=_sds((), jnp.int32),
+            mu=jax.tree.map(lambda x: _sds(x.shape, jnp.float32),
+                            abstract),
+            nu=jax.tree.map(lambda x: _sds(x.shape, jnp.float32),
+                            abstract))
+        ospecs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+        mspecs = {"loss": P(), "lr": P(), "grad_norm": P(), "xent": P(),
+                  "aux": P()}
+        fn = jax.jit(jax.shard_map(
+            inner, mesh=mesh, in_specs=(pspecs, ospecs, bspecs),
+            out_specs=(pspecs, ospecs, mspecs), check_vma=False))
+        return fn, (abstract, opt, batch), cfg
+
+    pspecs = sharding.param_specs(abstract, cfg, dp_axis=dp_spec,
+                                  fsdp=False)  # inference: TP-resident
+    if kind == "prefill":
+        batch = batch_sds(cfg, gbatch, seq)
+        bspecs = {k: P(dp_spec) for k in batch}
+        cd = jnp.bfloat16
+
+        def prefill_fn(p, b):
+            return model.prefill(p, b, cfg, pc, max_seq=seq,
+                                 cache_dtype=cd)
+        # global cache shapes: init_cache is params-free (avoids tp
+        # padding skew), and prefill emits the same structure/layout
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(cfg, UNSHARDED, gbatch, seq,
+                                     cache_dtype=cd))
+        cspecs = cache_specs(cfg, cache_abs, dp_spec, batch_sharded=True, tp=tp)
+        logit_spec = P(dp_spec, None, "model")
+        fn = jax.jit(jax.shard_map(
+            prefill_fn, mesh=mesh, in_specs=(pspecs, bspecs),
+            out_specs=(logit_spec, cspecs), check_vma=False))
+        return fn, (abstract, batch), cfg
+
+    # decode kinds
+    window = decode_window(cfg, shape_name)
+    batch_sharded = gbatch >= dp_size and gbatch % dp_size == 0
+    cd = jnp.bfloat16
+    cache_abs = jax.eval_shape(
+        lambda: model.init_cache(cfg, UNSHARDED, gbatch, seq,
+                                 cache_dtype=cd, window=window))
+    cspecs = cache_specs(cfg, cache_abs, dp_spec,
+                         batch_sharded=batch_sharded, tp=tp)
+    tok = _sds((gbatch, 1), jnp.int32)
+    tok_spec = P(dp_spec if batch_sharded else None, None)
+    pos = _sds((), jnp.int32)
+
+    def serve_fn(p, c, t, pos):
+        return model.decode_step(p, c, t, pos, cfg, pc, window=window)
+    logit_spec = P(dp_spec if batch_sharded else None, None, None)
+    fn = jax.jit(jax.shard_map(
+        serve_fn, mesh=mesh,
+        in_specs=(pspecs, cspecs, tok_spec, P()),
+        out_specs=(logit_spec, cspecs), check_vma=False))
+    return fn, (abstract, cache_abs, tok, pos), cfg
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, backend: str,
+            out_dir: str, mesh_shape: str = None,
+            allreduce_mode: str = "two_phase") -> dict:
+    """``mesh_shape``: 'DPxTP' logical re-factorization of the single pod
+    (same 256 chips) - the §Perf mesh-reshape experiments."""
+    mesh_name = ("pod" + mesh_shape) if mesh_shape else (
+        "pod2x16x16" if multi_pod else "pod16x16")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "backend": backend, "allreduce_mode": allreduce_mode,
+           "status": "error"}
+    t0 = time.time()
+    try:
+        if mesh_shape:
+            dp_, tp_ = (int(x) for x in mesh_shape.split("x"))
+            mesh = jax.make_mesh((dp_, tp_), ("data", "model"))
+        elif os.environ.get("REPRO_DRYRUN_DEVICES"):
+            # reduced mesh for plumbing tests (REPRO_DRYRUN_DEVICES=8)
+            mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model")) \
+                if multi_pod else jax.make_mesh((2, 2),
+                                                ("data", "model"))
+        else:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, cfg = build_lowerable(arch, shape_name, mesh, backend,
+                                        allreduce_mode=allreduce_mode)
+        from repro.core import ledger
+        ledger.reset()
+        lowered = fn.lower(*args)
+        # trace-time wire-byte ledger: exact per-step collective bytes
+        # including scan trip counts, microbatch loops, remat replays and
+        # AD transposes (the HLO parse below counts scan bodies ONCE -
+        # see EXPERIMENTS.md "scan undercount").
+        rec["ledger"] = ledger.snapshot()
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in dict(ca).items()
+                       if isinstance(v, (int, float))}
+        rec["collectives"] = parse_collectives(compiled.as_text())
+        rec["params"] = int(cfg.param_count(tp=mesh.shape["model"]))
+        rec["active_params"] = int(
+            cfg.active_param_count(tp=mesh.shape["model"]))
+        rec["status"] = "ok"
+        print(f"[dryrun] {arch} {shape_name} {mesh_name} {backend}: OK "
+              f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s)")
+        print(f"  memory: {rec['memory']}")
+        flops = rec["cost"].get("flops", 0.0)
+        print(f"  flops/chip: {flops:.3e}  wire bytes/chip: "
+              f"{rec['collectives']['total_wire_bytes']:.3e}")
+    except Exception as e:  # noqa: BLE001 - record and continue
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {arch} {shape_name} {mesh_name} {backend}: "
+              f"FAIL {rec['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "" if allreduce_mode == "two_phase" else \
+            f"_{allreduce_mode}"
+        fname = (f"{arch}_{shape_name}_{mesh_name}_{backend}"
+                 f"{suffix}.json")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"],
+                    default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--backend", choices=["ring", "cxl"], default="ring")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="DPxTP single-pod logical mesh override")
+    ap.add_argument("--allreduce-mode", default="two_phase",
+                    choices=["two_phase", "faithful"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, args.backend, args.out,
+                              mesh_shape=args.mesh_shape,
+                              allreduce_mode=args.allreduce_mode)
+                failures += rec["status"] != "ok"
+    print(f"[dryrun] done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (not module constants) so importing this module
+never touches jax device state.  The production target is TPU v5e:
+one pod = 16x16 = 256 chips, multi-pod = 2 x 256 = 512.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(tp: int = 1, dp: int = 1):
+    """Small mesh for local/CI runs on forced host devices."""
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axis spec for a mesh (hierarchical when the pod
+    axis exists)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,84 @@
+"""Production training launcher.
+
+On a real TPU cluster this process runs per host (jax.distributed); on
+this CPU container it drives the same code over forced host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --steps 100 --backend cxl [--multi-pod] [--smoke]
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --mesh 2x4 --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import model
+from repro.optim import adamw_init
+from repro.training import checkpoint
+from repro.training.train_loop import (TrainConfig,
+                                       make_sharded_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--backend", choices=["ring", "cxl"],
+                    default="ring")
+    ap.add_argument("--slicing-factor", type=int, default=4)
+    ap.add_argument("--allreduce-mode", default="two_phase",
+                    choices=["two_phase", "faithful"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default=None,
+                    help="DPxTP, e.g. 2x4; default: production mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.mesh:
+        dp, tp = (int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh((dp, tp), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    tcfg = TrainConfig(lr=args.lr, warmup=min(20, args.steps // 5),
+                       total_steps=args.steps, backend=args.backend,
+                       slicing_factor=args.slicing_factor,
+                       allreduce_mode=args.allreduce_mode,
+                       microbatches=args.microbatches, clip_norm=None)
+    step, pspecs, bspecs, pc = make_sharded_train_step(
+        cfg, tcfg, mesh, dp_axis=dp_axes(mesh))
+    tp = mesh.shape["model"]
+    params = model.init_params(jax.random.key(0), cfg, tp=tp,
+                               dtype=jnp.float32)
+    opt = adamw_init(params)
+    data = iter(SyntheticTokens(cfg, batch=args.batch, seq=args.seq))
+    print(f"training {cfg.name} on mesh {dict(mesh.shape)} "
+          f"backend={args.backend}")
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), data):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = step(params, opt, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, args.steps, {"params": params})
+        print(f"saved {args.ckpt}/step_{args.steps:08d}")
+
+
+if __name__ == "__main__":
+    main()

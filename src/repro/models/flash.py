@@ -1,0 +1,222 @@
+"""Blocked (FlashAttention-style) attention in pure JAX with a
+recompute-backward custom VJP.
+
+Used by ``layers.attention_scores`` for long sequences so neither the
+forward nor the backward ever materializes the (L, L) score matrix:
+
+* forward: online-softmax over kv blocks (running max / normalizer);
+* backward: recomputes the per-block probabilities from the saved
+  (q, k, v, o, m, l) - the standard FlashAttention-2 recipe - so memory
+  stays O(L * block) under ``jax.grad`` and ``jax.checkpoint``.
+
+This is also the numerical oracle for the Pallas ``flash_attention``
+kernel (kernels/ref.py re-exports it).
+
+Shapes: q (B, Lq, H, D); k/v (B, Lk, H, D) - GQA expansion happens in the
+caller.  Causal masking uses absolute positions (q_offset supports
+q-chunked callers); ``window`` adds a sliding-window lower bound.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BLOCK = 512
+NEG_INF = -1e30
+
+
+def _pad_to(x, block, axis):
+    l = x.shape[axis]
+    pad = (-l) % block
+    if pad == 0:
+        return x, l
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), l
+
+
+def _mask(qpos, kpos, causal, window, kv_len=None):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        m &= kpos[None, :] < kv_len   # block-padding on the kv axis
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    q_offset: int = 0, block: int = DEFAULT_BLOCK):
+    out, _ = _flash_fwd(q, k, v, causal, window, q_offset, block)
+    return out
+
+
+def _flash_core(q, k, v, causal, window, q_offset, block, kv_len=None):
+    """Returns (o, m, l) for the padded inputs."""
+    b, lq, h, d = q.shape
+    lk = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    nq, nk = lq // block, lk // block
+
+    qb = q.reshape(b, nq, block, h, d)
+    kb = k.reshape(b, nk, block, h, d)
+    vb = v.reshape(b, nk, block, h, d)
+
+    def q_step(_, qi):
+        q_i, iq = qi
+        qpos = q_offset + iq * block + jnp.arange(block)
+
+        def kv_step(carry, kvj):
+            m_run, l_run, acc = carry
+            k_j, v_j, jk = kvj
+            kpos = jk * block + jnp.arange(block)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qpos, kpos, causal, window, kv_len)
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_j.dtype), v_j
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block), jnp.float32)
+        a0 = jnp.zeros((b, h, block, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nk)))
+        o = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, (o, m, l)
+
+    _, (o, m, l) = jax.lax.scan(
+        q_step, None, (qb.swapaxes(0, 1), jnp.arange(nq)))
+    # o: (nq, b, h, block, d) -> (b, lq, h, d)
+    o = o.transpose(1, 0, 3, 2, 4).reshape(b, lq, h, d)
+    m = m.transpose(1, 0, 3, 2).reshape(b, lq, h)
+    l = l.transpose(1, 0, 3, 2).reshape(b, lq, h)
+    return o, m, l
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, block):
+    qp, lq = _pad_to(q, block, 1)
+    kp, lk = _pad_to(k, block, 1)
+    vp, _ = _pad_to(v, block, 1)
+    if kp.shape[1] != k.shape[1]:
+        # padded kv rows must never win the max: rely on causal/pos mask
+        pass
+    o, m, l = _flash_core(qp, kp, vp, causal, window, q_offset, block, kv_len=lk)
+    out = o[:, :lq].astype(q.dtype)
+    return out, (q, k, v, out, m[:, :lq], l[:, :lq])
+
+
+def _flash_bwd(causal, window, q_offset, block, res, do):
+    q, k, v, o, m, l = res
+    b, lq, h, d = q.shape
+    lk = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    qp, _ = _pad_to(q, block, 1)
+    kp, _ = _pad_to(k, block, 1)
+    vp, _ = _pad_to(v, block, 1)
+    op, _ = _pad_to(o, block, 1)
+    dop, _ = _pad_to(do, block, 1)
+    mp, _ = _pad_to(m, block, 1)
+    lp, _ = _pad_to(l, block, 1)
+    nq, nk = qp.shape[1] // block, kp.shape[1] // block
+
+    # D = rowsum(dO * O)
+    Dmat = jnp.sum(dop.astype(jnp.float32) * op.astype(jnp.float32),
+                   axis=-1)                       # (b, lqp, h)
+
+    qb = qp.reshape(b, nq, block, h, d)
+    kb = kp.reshape(b, nk, block, h, d)
+    vb = vp.reshape(b, nk, block, h, d)
+    dob = dop.reshape(b, nq, block, h, d)
+    mb = mp.reshape(b, nq, block, h)
+    lb = lp.reshape(b, nq, block, h)
+    Db = Dmat.reshape(b, nq, block, h)
+
+    def kv_step(_, kvj):
+        k_j, v_j, jk = kvj
+        kpos = jk * block + jnp.arange(block)
+
+        def q_step(carry, qi):
+            dk_run, dv_run = carry
+            q_i, do_i, m_i, l_i, D_i, iq = qi
+            qpos = q_offset + iq * block + jnp.arange(block)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qpos, kpos, causal, window, lk)
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            p = jnp.exp(s - m_i.transpose(0, 2, 1)[..., None]) / \
+                jnp.maximum(l_i.transpose(0, 2, 1)[..., None], 1e-20)
+            dp = jnp.einsum("bqhd,bkhd->bhqk",
+                            do_i.astype(jnp.float32),
+                            v_j.astype(jnp.float32))
+            ds = p * (dp - D_i.transpose(0, 2, 1)[..., None]) * scale
+            dk = jnp.einsum("bhqk,bqhd->bkhd", ds,
+                            q_i.astype(jnp.float32))
+            dv = jnp.einsum("bhqk,bqhd->bkhd", p,
+                            do_i.astype(jnp.float32))
+            return (dk_run + dk, dv_run + dv), None
+
+        z = jnp.zeros((b, block, h, d), jnp.float32)
+        (dk, dv), _ = jax.lax.scan(
+            q_step, (z, z),
+            (qb.swapaxes(0, 1), dob.swapaxes(0, 1), mb.swapaxes(0, 1),
+             lb.swapaxes(0, 1), Db.swapaxes(0, 1), jnp.arange(nq)))
+        return None, (dk, dv)
+
+    _, (dk, dv) = jax.lax.scan(
+        kv_step, None,
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nk)))
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(b, -1, h, d)[:, :lk]
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(b, -1, h, d)[:, :lk]
+
+    def dq_q_step(_, qi):
+        q_i, do_i, m_i, l_i, D_i, iq = qi
+        qpos = q_offset + iq * block + jnp.arange(block)
+
+        def dq_kv_step(dq_run, kvj):
+            k_j, v_j, jk = kvj
+            kpos = jk * block + jnp.arange(block)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qpos, kpos, causal, window, lk)
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            p = jnp.exp(s - m_i.transpose(0, 2, 1)[..., None]) / \
+                jnp.maximum(l_i.transpose(0, 2, 1)[..., None], 1e-20)
+            dp = jnp.einsum("bqhd,bkhd->bhqk",
+                            do_i.astype(jnp.float32),
+                            v_j.astype(jnp.float32))
+            ds = p * (dp - D_i.transpose(0, 2, 1)[..., None]) * scale
+            dq = jnp.einsum("bhqk,bkhd->bqhd", ds,
+                            k_j.astype(jnp.float32))
+            return dq_run + dq, None
+
+        z = jnp.zeros((b, block, h, d), jnp.float32)
+        dq, _ = jax.lax.scan(dq_kv_step, z,
+                             (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
+                              jnp.arange(nk)))
+        return None, dq
+
+    _, dq = jax.lax.scan(
+        dq_q_step, None,
+        (qb.swapaxes(0, 1), dob.swapaxes(0, 1), mb.swapaxes(0, 1),
+         lb.swapaxes(0, 1), Db.swapaxes(0, 1), jnp.arange(nq)))
+    dq = dq.transpose(1, 0, 2, 3, 4).reshape(b, -1, h, d)[:, :lq]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

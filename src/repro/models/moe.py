@@ -1,0 +1,158 @@
+"""Mixture-of-Experts layer with expert parallelism over the tp axis.
+
+Experts are sharded across the model axis (padded to a multiple of tp,
+padding experts masked with -inf router logits).  Token routing uses the
+paper's AllToAll primitive - the collective the paper identifies with MoE
+("Architectures like MoE further introduce all-to-all communication to
+route and aggregate token batches across distributed expert layers").
+
+Dispatch is capacity-based and sort-free:
+
+1. router -> top-k experts per token;
+2. position-in-expert via cumsum over the one-hot assignment; tokens
+   beyond the per-expert capacity are dropped (standard Switch behavior);
+3. scatter into an (experts, capacity, d) buffer, AllToAll over tp so each
+   shard receives the buffers of its local experts from every peer;
+4. local expert FFNs (SwiGLU), AllToAll back, weighted combine.
+
+With ``pc.tp == 1`` the same code runs unsharded (smoke tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.pcontext import ParallelContext
+
+Params = dict
+
+
+def init_moe(key, cfg: ModelConfig, tp: int, dtype) -> Params:
+    """GLOBAL shapes: experts padded to a multiple of tp and stacked on
+    the leading (expert-parallel) dim; the router stays replicated and
+    masks padded experts with -inf."""
+    m = cfg.moe
+    e_pad = m.padded_experts(tp)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers._dense_init(ks[0], (cfg.d_model, e_pad),
+                                     cfg.d_model, jnp.float32),
+        "wg": layers._dense_init(ks[1], (e_pad, cfg.d_model,
+                                         m.expert_d_ff), cfg.d_model,
+                                 dtype),
+        "wu": layers._dense_init(ks[2], (e_pad, cfg.d_model,
+                                         m.expert_d_ff), cfg.d_model,
+                                 dtype),
+        "wd": layers._dense_init(ks[3], (e_pad, m.expert_d_ff,
+                                         cfg.d_model), m.expert_d_ff,
+                                 dtype),
+    }
+    if m.dense_residual_d_ff:
+        p["dense"] = layers.init_ffn(ks[4], cfg.d_model,
+                                     m.dense_residual_d_ff, dtype)
+    return p
+
+
+def moe_forward(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                pc: ParallelContext,
+                capacity: Optional[int] = None,
+                shard_tokens: bool = True):
+    """x: (B, L, d).  Returns (out, aux_loss).
+
+    ``shard_tokens`` (§Perf H1): inside a tp row the activations are
+    replicated, so dispatching the full token set from every shard
+    duplicates the expert GEMMs and the AllToAll payload tp times.  When
+    enabled (and tokens divide tp), each shard routes a DISJOINT token
+    slice and the combined outputs are re-assembled with one tp
+    AllGather - expert FLOPs and a2a wire drop by ~tp at the cost of one
+    (t, d) gather per layer."""
+    m = cfg.moe
+    b, l, d = x.shape
+    t_full = b * l
+    # local expert count from the (possibly shard_map-split) weight shape
+    e_local = params["wg"].shape[0]
+    e_pad = e_local * pc.tp
+    k = m.top_k
+
+    xt_full = x.reshape(t_full, d)
+    sharded = shard_tokens and pc.tp > 1 and t_full % pc.tp == 0 \
+        and t_full >= pc.tp
+    if sharded:
+        t = t_full // pc.tp
+        start = pc.tp_index() * t
+        xt = jax.lax.dynamic_slice_in_dim(xt_full, start, t, axis=0)
+    else:
+        t = t_full
+        xt = xt_full
+    logits = (xt.astype(jnp.float32) @ params["router"])
+    if e_pad != m.num_experts:
+        pad_mask = jnp.arange(e_pad) >= m.num_experts
+        logits = jnp.where(pad_mask[None, :], -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                # (t, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_e[:, 0], e_pad), axis=0)
+    aux = m.num_experts * jnp.sum(me * ce) * m.router_aux_weight
+
+    if capacity is None:
+        capacity = max(1, int(t * k * m.capacity_factor) // e_pad)
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(top_e, e_pad, dtype=jnp.int32)  # (t, k, E)
+    flat_oh = onehot.reshape(t * k, e_pad)
+    pos = jnp.cumsum(flat_oh, axis=0) - flat_oh             # (t*k, E)
+    pos_in_e = jnp.sum(pos * flat_oh, axis=-1)              # (t*k,)
+    e_flat = top_e.reshape(t * k)
+    w_flat = top_w.reshape(t * k)
+    keep = pos_in_e < capacity
+
+    # scatter tokens into (E, capacity, d)
+    slot = e_flat * capacity + jnp.minimum(pos_in_e, capacity - 1)
+    buf = jnp.zeros((e_pad * capacity, d), x.dtype)
+    src = jnp.repeat(xt, k, axis=0) * keep[:, None].astype(x.dtype)
+    buf = buf.at[slot].add(src)
+    buf = buf.reshape(e_pad, capacity, d)
+
+    if pc.tp > 1:
+        # (E, C, d) -> exchange so shard s receives buffers for experts
+        # [s*e_local, (s+1)*e_local) from every peer.
+        recv = pc.tp_all_to_all(buf.reshape(e_pad * capacity, d))
+        # recv rows: (tp segments) x (e_local*capacity) from each peer;
+        # peer p's segment holds ITS tokens for MY experts.
+        recv = recv.reshape(pc.tp, e_local, capacity, d)
+        expert_in = jnp.moveaxis(recv, 0, 1).reshape(
+            e_local, pc.tp * capacity, d)
+    else:
+        expert_in = buf  # (E, C, d)
+
+    # local expert SwiGLU (batched over experts)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", expert_in, params["wu"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["wd"])
+
+    if pc.tp > 1:
+        back = jnp.moveaxis(
+            expert_out.reshape(e_local, pc.tp, capacity, d), 1, 0)
+        back = pc.tp_all_to_all(
+            back.reshape(pc.tp * e_local * capacity, d))
+        out_buf = back.reshape(e_pad, capacity, d)
+    else:
+        out_buf = expert_out
+
+    # gather + weighted combine
+    flat_out = out_buf.reshape(e_pad * capacity, d)
+    tok_out = flat_out[slot] * (w_flat * keep)[:, None].astype(x.dtype)
+    combined = tok_out.reshape(t, k, d).sum(axis=1)
+    if sharded:
+        combined = pc.comm.all_gather(combined, pc.tp_axis)
+    out = combined.reshape(b, l, d)
+
+    if "dense" in params:  # Arctic: dense residual MLP in parallel
+        out = out + layers.ffn_forward(params["dense"], x, pc)
+    return out, aux

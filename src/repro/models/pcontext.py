@@ -1,0 +1,76 @@
+"""Parallel context: how a model invocation is sharded.
+
+All model code takes a ``ParallelContext``; with ``tp_axis=None`` the code
+runs unsharded (CPU smoke tests).  All collectives route through the
+CXL-CCL ``Communicator`` so the backend (``ring`` vs ``cxl``) is a launch
+flag, never a model change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.api import Communicator
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    tp_axis: Optional[str] = None                 # model/tensor parallel
+    dp_axis: Optional[Union[str, tuple]] = None   # data/FSDP axis (maybe
+                                                  # hierarchical)
+    tp: int = 1                                   # static tp size
+    comm: Communicator = Communicator()
+
+    def tp_all_reduce(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.tp_axis is None or self.tp == 1:
+            return x
+        return self.comm.all_reduce(x, self.tp_axis)
+
+    def tp_all_gather(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.tp_axis is None or self.tp == 1:
+            return x
+        return self.comm.all_gather(x, self.tp_axis)
+
+    def tp_all_to_all(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.tp_axis is None or self.tp == 1:
+            return x
+        return self.comm.all_to_all(x, self.tp_axis)
+
+    def tp_psum_max(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.tp_axis is None or self.tp == 1:
+            return x
+        return lax.pmax(x, self.tp_axis)
+
+    def tp_max(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Cross-shard max that is safe under differentiation (lax.pmax
+        has no AD rule): stack via all-gather, reduce locally.  Payloads
+        are tiny (per-token scalars)."""
+        if self.tp_axis is None or self.tp == 1:
+            return x
+        stacked = self.comm.all_gather(x[None], self.tp_axis)
+        return jnp.max(stacked, axis=0)
+
+    def tp_index(self):
+        if self.tp_axis is None or self.tp == 1:
+            return jnp.int32(0)
+        return lax.axis_index(self.tp_axis)
+
+    def dp_all_reduce_mean(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.dp_axis is None:
+            return x
+        ax = self.dp_axis
+        total = self.comm.all_reduce(x, ax)
+        size = 1
+        # static size lookup is the caller's job; use pmean-equivalent
+        if isinstance(ax, str):
+            size = lax.axis_size(ax)
+        else:
+            for a in ax:
+                size = size * lax.axis_size(a)
+        return total / size
+
+
+UNSHARDED = ParallelContext()

@@ -1,0 +1,214 @@
+"""Parameter sharding specs: tensor parallel over ``model``, FSDP over the
+data axis (the paper's Sec. 5.5 case study: FSDP AllGather before use,
+ReduceScatter on grads - both through the CXL-CCL Communicator).
+
+``param_specs`` walks the param pytree by path and assigns:
+
+* TP dim (over ``model``): Megatron column/row rules per leaf name;
+* FSDP dim (over the dp axis, possibly hierarchical ``(pod, data)``):
+  the largest remaining dim that divides dp, for leaves above a size
+  threshold.  Small leaves (norms, biases, conv kernels) stay replicated,
+  like torch-FSDP's ``min_num_params``.
+
+Stacked scan-group params carry a leading layer dim which is never
+sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+from repro.models.pcontext import ParallelContext
+
+FSDP_MIN_SIZE = 65536
+
+# leaf name -> dim sharded over the model axis (None = replicated)
+TP_DIM = {
+    "wq": 1, "wk": 1, "wv": 1, "wo": 0,
+    "wg": None, "wu": None, "wd": None,    # resolved by rank below
+    "tok": 0, "head": 1,
+    "router": None,
+    "in_x": 1, "in_z": 1, "in_dt": 1, "in_bc": None,
+    "conv_w": 0, "conv_x": 0, "conv_bc": None,
+    "x_proj": 0, "dt_proj": 1, "dt_bias": 0,
+    "A_log": 0, "D": 0, "norm": 0,
+    "out_proj": 0,
+    "norm1": None, "norm2": None, "norm_x": None,
+    "final_norm": None, "enc_norm": None,
+    "enc_proj": None, "front_proj": None,
+}
+
+
+def _path_names(path) -> list[str]:
+    return [k.key if isinstance(k, DictKey) else str(k) for k in path]
+
+
+def _tp_dim(names: list[str], rank: int, stacked: bool) -> Optional[int]:
+    leaf = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    base_rank = rank - (1 if stacked else 0)
+    if leaf in ("wg", "wu", "wd"):
+        if parent == "moe" or base_rank == 3:
+            # expert-stacked MoE weights: expert-parallel on dim 0
+            return 0
+        # dense FFN: column for wg/wu, row for wd
+        return 1 if leaf in ("wg", "wu") else 0
+    if leaf in ("wk", "wv") and parent in ("attn", "xattn"):
+        return 1  # may be overridden to replicated by kv_sharded=False
+    d = TP_DIM.get(leaf, None)
+    return d
+
+
+def param_specs(params: Any, cfg, *, model_axis: str = "model",
+                dp_axis: Union[str, tuple, None] = None,
+                fsdp: bool = True) -> Any:
+    """PartitionSpec pytree matching ``params`` (arrays or
+    ShapeDtypeStructs)."""
+    dp_size = None  # divisibility is checked against shapes at use time
+
+    def spec_for(path, leaf) -> P:
+        names = _path_names(path)
+        shape = leaf.shape
+        rank = len(shape)
+        stacked = _is_stacked(names, rank)
+        tp_d = _tp_dim(names, rank, stacked)
+        if tp_d is not None and stacked:
+            tp_d += 1
+        if tp_d is not None and not cfg.kv_sharded(_infer_tp()) and \
+                names[-1] in ("wk", "wv"):
+            tp_d = None
+        dims: list = [None] * rank
+        if tp_d is not None:
+            dims[tp_d] = model_axis
+        # encoder / frontend projections are used outside the FSDP-gather
+        # hook (tiny stacks) - keep them dp-replicated
+        no_fsdp = any(n in ("encoder", "enc_proj", "front_proj")
+                      for n in names)
+        if fsdp and dp_axis is not None and not no_fsdp \
+                and leaf.size >= FSDP_MIN_SIZE:
+            start = 1 if stacked else 0
+            for i in range(start, rank):
+                if dims[i] is None and shape[i] % _dp_size() == 0:
+                    dims[i] = dp_axis
+                    break
+        return P(*dims)
+
+    def _infer_tp() -> int:
+        return _MESH_SIZES.get(model_axis, 1)
+
+    def _dp_size() -> int:
+        if isinstance(dp_axis, str):
+            return _MESH_SIZES.get(dp_axis, 1)
+        n = 1
+        for a in dp_axis:
+            n *= _MESH_SIZES.get(a, 1)
+        return n
+
+    return tree_map_with_path(spec_for, params)
+
+
+# Axis sizes for spec construction; set by callers before building specs
+# (kept module-level so spec building can stay a pure tree walk).
+_MESH_SIZES: dict[str, int] = {}
+
+
+def set_mesh_sizes(sizes: dict[str, int]) -> None:
+    _MESH_SIZES.clear()
+    _MESH_SIZES.update(sizes)
+
+
+def _is_stacked(names: list[str], rank: int) -> bool:
+    """Group entries 'g<i>' hold layer-stacked params; 'encoder' too."""
+    for n in names[:-1]:
+        if n == "encoder" or (n.startswith("g") and n[1:].isdigit()):
+            return True
+    return False
+
+
+def row_specs(specs: Any) -> Any:
+    """Drop the leading (layer) dim of stacked specs: specs for a single
+    scan-row param slice, used for the in-scan FSDP gather."""
+    def drop(path, spec):
+        names = _path_names(path)
+        if _is_stacked(names, 0) and len(spec) > 0:
+            return P(*spec[1:])
+        return spec
+    return tree_map_with_path(drop, specs)
+
+
+def _has_axis(spec: P, axes) -> Optional[int]:
+    target = axes if isinstance(axes, (tuple, list)) else (axes,)
+    for i, s in enumerate(spec):
+        if s == axes or s == tuple(target) or (
+                isinstance(s, str) and s in target):
+            return i
+    return None
+
+
+def sync_grads(grads: Any, specs: Any, pc: ParallelContext,
+               dp_axis: Union[str, tuple, None]) -> Any:
+    """Sum gradients of replicated parameters across the mesh axes they
+    are replicated over.
+
+    * FSDP-sharded leaves already receive their cross-dp sum through the
+      AD transpose of the gather (ReduceScatter);
+    * TP-sharded leaves' grads are complete locally;
+    * leaves replicated over an axis accumulate only their local
+      contribution and need an explicit AllReduce over that axis
+      (Megatron's layernorm-grad sync, generalized).
+    """
+    dp = tuple(dp_axis) if isinstance(dp_axis, (tuple, list)) else \
+        ((dp_axis,) if dp_axis else ())
+    tp = pc.tp_axis
+
+    def fix(path, g):
+        spec = specs
+        for k in path:
+            spec = spec[k.key if isinstance(k, DictKey) else k.idx]
+        flat_axes = set()
+        for s in spec:
+            if s is None:
+                continue
+            for a in (s if isinstance(s, tuple) else (s,)):
+                flat_axes.add(a)
+        missing = []
+        if tp is not None and tp not in flat_axes:
+            missing.append(tp)
+        if dp and not any(a in flat_axes for a in dp):
+            missing.extend(dp)
+        for ax in missing:
+            g = pc.comm.all_reduce(g, ax)
+        return g
+
+    return tree_map_with_path(fix, grads)
+
+
+def fsdp_gather_fn(all_row_specs: dict, pc: ParallelContext,
+                   dp_axis: Union[str, tuple]):
+    """Returns gather(group_key, row_params) -> gathered params.
+
+    AllGather (via the CXL-CCL Communicator) every leaf whose spec shards
+    a dim over the dp axis; autodiff transposes it into the matching
+    ReduceScatter on the gradient - exactly FSDP's communication pattern.
+    """
+    def gather(group_key: str, row_params):
+        specs = all_row_specs[group_key]
+
+        def g(path, x):
+            spec = specs
+            for k in path:
+                spec = spec[k.key if isinstance(k, DictKey) else k.idx]
+            dim = _has_axis(spec, dp_axis)
+            if dim is None:
+                return x
+            moved = jnp.moveaxis(x, dim, 0)
+            full = pc.comm.all_gather(moved, dp_axis)
+            return jnp.moveaxis(full, 0, dim)
+
+        return tree_map_with_path(g, row_params)
+    return gather

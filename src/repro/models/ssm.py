@@ -1,0 +1,244 @@
+"""Mamba-1 (S6 selective scan) and Mamba-2 (SSD) blocks.
+
+Channel-parallel over the tp axis: ``d_inner`` (and for Mamba-2 the head
+dim grouping) is sharded; the recurrent scan is independent per channel so
+no collective is needed inside the scan.  The only cross-channel coupling
+is Mamba-1's ``x_proj`` (B/C/dt are functions of the full d_inner), which
+is a row-parallel matmul -> one tp AllReduce, and the out_proj (row
+parallel -> one tp AllReduce).
+
+The scan itself is a first-order linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` evaluated with ``jax.lax.associative_scan``
+(log-depth, TPU friendly) for training/prefill, and a single fused update
+for decode.  ``kernels/ssm_scan`` provides the Pallas version of the same
+contraction for the TPU hot path.
+
+Decode state per block: (conv_state (B, d_conv-1, d_in_local),
+ssm_state (B, ..., d_state)) - O(1) in context length, which is what makes
+``long_500k`` native for the SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.pcontext import ParallelContext
+
+Params = dict
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.ssm.dt_rank or math.ceil(cfg.d_model / 16)
+
+
+def linear_scan(a: jnp.ndarray, b: jnp.ndarray,
+                h0: Optional[jnp.ndarray] = None):
+    """h_t = a_t * h_{t-1} + b_t along axis 1 (seq).  Returns all h_t and
+    the final state."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_all, h_all = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h_all, h_all[:, -1]
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv.  x: (B, L, C); w: (C, K).  ``state`` is the
+    trailing K-1 inputs from the previous segment (decode).  Returns
+    (y, new_state)."""
+    b, l, c = x.shape
+    k = w.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, k - 1, c), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, L+K-1, C)
+    idx = jnp.arange(l)[:, None] + jnp.arange(k)[None, :]
+    windows = xp[:, idx, :]                           # (B, L, K, C)
+    y = jnp.einsum("blkc,ck->blc", windows, w)
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return y, new_state
+
+
+# ======================================================================== #
+# Mamba-1
+# ======================================================================== #
+
+def init_mamba1(key, cfg: ModelConfig, tp: int, dtype) -> Params:
+    """GLOBAL shapes; the inner (channel) dim is tp-sharded at run time.
+    ``in_proj`` is stored as separate x/z tensors so column sharding stays
+    well-defined."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_x": layers._dense_init(ks[0], (cfg.d_model, d_in),
+                                   cfg.d_model, dtype),
+        "in_z": layers._dense_init(ks[5], (cfg.d_model, d_in),
+                                   cfg.d_model, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_in, s.d_conv)) /
+                   math.sqrt(s.d_conv)).astype(dtype),
+        # x_proj is row-parallel (input d_in sharded) -> tp AllReduce
+        "x_proj": layers._dense_init(ks[2], (d_in, r + 2 * s.d_state),
+                                     d_in, dtype),
+        "dt_proj": layers._dense_init(ks[3], (r, d_in), r, dtype),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+            (d_in, 1))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": layers._dense_init(ks[4], (d_in, cfg.d_model), d_in,
+                                       dtype),
+    }
+
+
+def mamba1_forward(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                   pc: ParallelContext, state: Optional[tuple] = None,
+                   return_state: bool = False):
+    """x: (B, L, d_model).  state: (conv_state, ssm_state) for decode
+    continuation."""
+    s = cfg.ssm
+    b, l, _ = x.shape
+    r = _dt_rank(cfg)
+
+    xin = x @ params["in_x"]                      # (B, L, d_loc)
+    z = x @ params["in_z"]
+    conv_state = state[0] if state is not None else None
+    xc, new_conv = causal_conv1d(xin, params["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    # B, C, dt from the full inner activation (row-parallel + AllReduce)
+    proj = pc.tp_all_reduce(xc @ params["x_proj"])  # (B, L, r+2N)
+    dt_in, Bmat, Cmat = jnp.split(proj, [r, r + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"]
+                         + params["dt_bias"])       # (B, L, d_loc)
+
+    A = -jnp.exp(params["A_log"])                   # (d_loc, N)
+    dt32 = dt.astype(jnp.float32)
+    xc32 = xc.astype(jnp.float32)
+    a = jnp.exp(dt32[..., None] * A[None, None])    # (B, L, d_loc, N)
+    bu = (dt32 * xc32)[..., None] * \
+        Bmat.astype(jnp.float32)[:, :, None, :]     # (B, L, d_loc, N)
+    h0 = state[1] if state is not None else None
+    h_all, h_last = linear_scan(a, bu, h0)
+    y = jnp.einsum("bldn,bln->bld", h_all,
+                   Cmat.astype(jnp.float32))        # (B, L, d_loc)
+    y = y + params["D"][None, None] * xc32
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = pc.tp_all_reduce(y @ params["out_proj"])
+    if return_state:
+        return out, (new_conv, h_last)
+    return out
+
+
+def mamba1_decode(params: Params, x: jnp.ndarray, state: tuple,
+                  cfg: ModelConfig, pc: ParallelContext):
+    """Single-token decode; x: (B, 1, d_model)."""
+    return mamba1_forward(params, x, cfg, pc, state=state,
+                          return_state=True)
+
+
+# ======================================================================== #
+# Mamba-2 (SSD, scalar A per head)
+# ======================================================================== #
+
+def init_mamba2(key, cfg: ModelConfig, tp: int, dtype) -> Params:
+    """GLOBAL shapes.  x/z/dt projections are channel/head-sharded; the
+    B/C projections and their conv are replicated (B/C are shared across
+    heads in SSD, so sharding them would change the model)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.headdim
+    ks = jax.random.split(key, 7)
+    return {
+        "in_x": layers._dense_init(ks[0], (cfg.d_model, d_in),
+                                   cfg.d_model, dtype),
+        "in_z": layers._dense_init(ks[1], (cfg.d_model, d_in),
+                                   cfg.d_model, dtype),
+        "in_bc": layers._dense_init(ks[2], (cfg.d_model, 2 * s.d_state),
+                                    cfg.d_model, dtype),
+        "in_dt": layers._dense_init(ks[3], (cfg.d_model, nh),
+                                    cfg.d_model, dtype),
+        "conv_x": (jax.random.normal(ks[4], (d_in, s.d_conv)) /
+                   math.sqrt(s.d_conv)).astype(dtype),
+        "conv_bc": (jax.random.normal(ks[5], (2 * s.d_state, s.d_conv)) /
+                    math.sqrt(s.d_conv)).astype(jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": layers._dense_init(ks[6], (d_in, cfg.d_model), d_in,
+                                       dtype),
+    }
+
+
+def mamba2_forward(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                   pc: ParallelContext, state: Optional[tuple] = None,
+                   return_state: bool = False):
+    s = cfg.ssm
+    b, l, _ = x.shape
+    d_loc = params["out_proj"].shape[0]
+    nh = d_loc // s.headdim
+
+    xin = x @ params["in_x"]
+    z = x @ params["in_z"]
+    bc = (x @ params["in_bc"]).astype(jnp.float32)
+    dt = x @ params["in_dt"]
+    # state is (conv_x, conv_bc, ssm): the x-conv state is channel-sharded
+    # over tp while the B/C-conv state is replicated, so they are separate
+    # cache entries (cf. cache_specs).
+    cs_x = state[0] if state is not None else None
+    cs_bc = state[1] if state is not None else None
+    xconv, new_conv_x = causal_conv1d(xin, params["conv_x"], cs_x)
+    bcconv, new_conv_bc = causal_conv1d(bc, params["conv_bc"], cs_bc)
+    xin = jax.nn.silu(xconv)
+    bcconv = jax.nn.silu(bcconv)
+    Bmat, Cmat = jnp.split(bcconv, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))           # (B, L, nh)
+    A = -jnp.exp(params["A_log"])                          # (nh,)
+    xh = xin.reshape(b, l, nh, s.headdim).astype(jnp.float32)
+    # h_t (B, L, nh, headdim, N): a_t scalar per head
+    a = jnp.exp(dt * A[None, None])                        # (B, L, nh)
+    bu = (dt[..., None] * xh)[..., None] * \
+        Bmat.astype(jnp.float32)[:, :, None, None, :]
+    h0 = state[2] if state is not None else None
+    h_all, h_last = linear_scan(a[..., None, None], bu, h0)
+    y = jnp.einsum("blhdn,bln->blhd", h_all, Cmat.astype(jnp.float32))
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(b, l, d_loc).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = pc.tp_all_reduce(y @ params["out_proj"])
+    if return_state:
+        return out, (new_conv_x, new_conv_bc, h_last)
+    return out
+
+
+def mamba2_decode(params: Params, x: jnp.ndarray, state: tuple,
+                  cfg: ModelConfig, pc: ParallelContext):
+    return mamba2_forward(params, x, cfg, pc, state=state,
+                          return_state=True)
+
+
+def mamba_state_shapes(cfg: ModelConfig, tp: int, batch: int,
+                       version: int) -> tuple:
+    """Abstract decode-state shapes: v1 -> (conv, ssm); v2 ->
+    (conv_x, conv_bc, ssm).  The x-conv/ssm dims are tp-sharded."""
+    s = cfg.ssm
+    d_loc = s.expand * cfg.d_model // tp
+    if version == 1:
+        return ((batch, s.d_conv - 1, d_loc),
+                (batch, d_loc, s.d_state))
+    nh = d_loc // s.headdim
+    return ((batch, s.d_conv - 1, d_loc),
+            (batch, s.d_conv - 1, 2 * s.d_state),
+            (batch, nh, s.headdim, s.d_state))

@@ -1,0 +1,7 @@
+from repro.optim.optimizer import (AdamWState, adamw_init, adamw_update,
+                                   clip_by_global_norm, cosine_schedule,
+                                   linear_warmup_cosine)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "cosine_schedule",
+           "linear_warmup_cosine"]

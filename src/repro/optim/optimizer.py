@@ -1,0 +1,96 @@
+"""AdamW + schedules, pytree-native (no optax dependency).
+
+The update is purely elementwise, so it is shard-transparent: applied to
+FSDP/TP param shards inside shard_map it computes exactly what it would
+compute on the full arrays.  Global-norm clipping is NOT shard-transparent
+(it needs a cross-shard reduction and de-duplication of replicated
+params), so it is only applied on the unsharded path; the sharded trainer
+uses per-shard clipping off by default (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any        # first moment (pytree like params)
+    nu: Any        # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                      nu=zeros(params))
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState, lr,
+                 cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_state).  ``lr`` is a scalar (possibly from
+    a schedule evaluated at state.step)."""
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:   # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    """Unsharded-path global-norm clip.  Returns (clipped, norm)."""
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int,
+                         total_steps: int) -> Callable:
+    cos = cosine_schedule(base_lr, max(1, total_steps - warmup))
+    def lr(step):
+        w = jnp.minimum(1.0, step.astype(jnp.float32) / max(1, warmup))
+        return jnp.where(step < warmup, base_lr * w, cos(step - warmup))
+    return lr

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeEngine, ServeConfig
+
+__all__ = ["ServeEngine", "ServeConfig"]

@@ -1,0 +1,77 @@
+"""Serving engine: batched prefill + decode with KV-cache management.
+
+Decode attention follows the flash-decoding layout (cache sequence dim
+sharded over tp, partial-softmax combine via two tp AllReduces through
+the CXL-CCL Communicator).  ``window`` switches to the ring-buffer
+sliding-window cache used by the ``long_500k`` shape for attention
+architectures; SSM rows always carry O(1) state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.models.pcontext import ParallelContext, UNSHARDED
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 2048
+    window: Optional[int] = None          # sliding-window cache size
+    temperature: float = 0.0              # 0 = greedy
+    cache_dtype: str = "float32"
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 pc: ParallelContext = UNSHARDED):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.pc = pc
+        cd = jnp.dtype(scfg.cache_dtype)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg, pc, scfg.max_seq,
+                                       cache_dtype=cd,
+                                       window=scfg.window))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, cfg, pc,
+                                                   window=scfg.window))
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        logits = logits[:, -1, :self.cfg.vocab_size]
+        if self.scfg.temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature).astype(jnp.int32)
+
+    def generate(self, batch: dict, max_new_tokens: int,
+                 seed: int = 0) -> np.ndarray:
+        """Greedy/temperature generation for a batch of prompts.
+        ``batch['tokens']`` is (B, L_prompt) right-aligned (no padding
+        support needed for the examples).  Returns (B, max_new_tokens)."""
+        key = jax.random.key(seed)
+        logits, caches = self._prefill(self.params, batch)
+        prompt_len = batch["tokens"].shape[1]
+        n_prefix = self.cfg.frontend_tokens if (
+            self.cfg.frontend != "text" and self.cfg.encoder is None) \
+            else 0
+        pos = prompt_len + n_prefix
+        out = []
+        key, k = jax.random.split(key)
+        tok = self._sample(logits, k)
+        out.append(tok)
+        for i in range(max_new_tokens - 1):
+            logits, caches = self._decode(self.params, caches,
+                                          tok[:, None],
+                                          jnp.int32(pos + i))
+            key, k = jax.random.split(key)
+            tok = self._sample(logits, k)
+            out.append(tok)
+        return np.stack([np.asarray(t) for t in out], axis=1)

@@ -1,0 +1,83 @@
+"""Checkpointing: pytree save/restore without external deps.
+
+Layout: ``<dir>/step_<n>/arrays.npz`` (flattened leaves, keyed by index)
+plus ``tree.json`` (the treedef paths + leaf dtypes/shapes) and
+``meta.json``.  Restore rebuilds the exact pytree and validates shapes.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.tree_util import DictKey, SequenceKey, tree_flatten_with_path
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         meta: Optional[dict] = None) -> str:
+    out = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    flat, treedef = tree_flatten_with_path(tree)
+    arrays = {}
+    index = []
+    for i, (path, leaf) in enumerate(flat):
+        arrays[f"a{i}"] = np.asarray(leaf)
+        index.append(_path_str(path))
+    np.savez(os.path.join(out, "arrays.npz"), **arrays)
+    with open(os.path.join(out, "tree.json"), "w") as f:
+        json.dump({"paths": index}, f)
+    with open(os.path.join(out, "meta.json"), "w") as f:
+        json.dump({"step": step, **(meta or {})}, f)
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (validates paths+shapes)."""
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(src, "tree.json")) as f:
+        saved_paths = json.load(f)["paths"]
+    data = np.load(os.path.join(src, "arrays.npz"))
+    flat, treedef = tree_flatten_with_path(like)
+    if len(flat) != len(saved_paths):
+        raise ValueError(
+            f"checkpoint has {len(saved_paths)} leaves, target structure "
+            f"has {len(flat)}")
+    leaves = []
+    for i, (path, leaf) in enumerate(flat):
+        ps = _path_str(path)
+        if ps != saved_paths[i]:
+            raise ValueError(
+                f"leaf {i} path mismatch: checkpoint {saved_paths[i]!r} "
+                f"vs target {ps!r}")
+        arr = data[f"a{i}"]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{ps}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree.unflatten(jax.tree.structure(like), leaves)
+
+
+def load_meta(ckpt_dir: str, step: int) -> dict:
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}", "meta.json")) as f:
+        return json.load(f)

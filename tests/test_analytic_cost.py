@@ -1,0 +1,62 @@
+"""Analytic roofline cost model: consistency with 6*N*D model FLOPs and
+basic monotonicity."""
+import pytest
+
+from benchmarks.analytic_cost import step_cost
+from repro.configs import get_config
+from repro.launch.dryrun import SHAPES
+
+
+def test_dense_train_flops_near_model_flops():
+    """Analytic FLOPs for a dense arch should sit between 6*N*D (no
+    remat, no attention) and ~2x that (remat 4/3 + attention + padding),
+    per chip."""
+    for arch in ("llama3-8b", "yi-6b", "deepseek-coder-33b"):
+        cfg = get_config(arch)
+        shape = SHAPES["train_4k"]
+        chips, tp = 256, 16
+        c = step_cost(arch, shape, chips, tp=tp)
+        tokens = shape["seq_len"] * shape["global_batch"]
+        model_flops = 6.0 * cfg.param_count() * tokens / chips
+        ratio = c.flops / model_flops
+        assert 1.0 < ratio < 3.5, (arch, ratio)
+
+
+def test_moe_token_sharding_reduces_flops():
+    shape = SHAPES["train_4k"]
+    c16 = step_cost("arctic-480b", shape, 256, tp=16)
+    # same chips, replicated dispatch modelled by tp=1 routing factor:
+    # compare against granite where tokens always divide tp
+    assert c16.flops > 0
+
+
+def test_decode_cheaper_than_prefill():
+    for arch in ("yi-6b", "falcon-mamba-7b", "granite-moe-3b-a800m"):
+        pre = step_cost(arch, SHAPES["prefill_32k"], 256)
+        dec = step_cost(arch, SHAPES["decode_32k"], 256)
+        assert dec.flops < pre.flops / 100, arch
+
+
+def test_window_caps_long_context_decode():
+    dense_long = step_cost("yi-6b", SHAPES["long_500k"], 256)
+    dense_32k = step_cost("yi-6b", SHAPES["decode_32k"], 256)
+    # batch 1 vs 128 but window 8k vs full 32k cache: per-step flops for
+    # long_500k must be far below a linear 16x extrapolation
+    assert dense_long.flops < dense_32k.flops
+
+
+def test_roofline_terms_positive_for_all_records():
+    import glob
+    import json
+    from benchmarks.roofline import terms
+    files = glob.glob("experiments/dryrun/*_ring.json")
+    if not files:
+        pytest.skip("no dry-run records present")
+    for f in files[:20]:
+        r = json.load(open(f))
+        if r["status"] != "ok":
+            continue
+        t = terms(r)
+        assert t["compute_s"] > 0 and t["memory_s"] > 0
+        assert t["dominant"] in ("compute", "memory", "collective")
+        assert 0 <= t["useful_ratio"] < 4

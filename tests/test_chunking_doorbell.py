@@ -1,0 +1,54 @@
+"""Slicing-factor chunking + doorbell state machine."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import chunking
+from repro.core.doorbell import DOORBELL_BYTES, DoorbellRegion
+
+
+@hp.given(st.integers(1, 1 << 22), st.integers(1, 64))
+def test_split_covers_exactly(total, factor):
+    chunks = chunking.split(total, factor)
+    assert sum(c.size for c in chunks) == total
+    assert chunks[0].offset == 0
+    for a, b in zip(chunks, chunks[1:]):
+        assert b.offset == a.offset + a.size
+
+
+@hp.given(st.integers(1, 1 << 20), st.integers(1, 32))
+def test_split_granularity(total, factor):
+    total4 = total * 4
+    chunks = chunking.split(total4, factor, granularity=4)
+    for c in chunks[:-1]:
+        assert c.offset % 4 == 0 and c.size % 4 == 0
+
+
+def test_min_chunk_clamp():
+    chunks = chunking.split(100_000, 32)  # 32 chunks would be ~3 KB each
+    assert len(chunks) <= 100_000 // chunking.MIN_CHUNK_BYTES + 1
+
+
+def test_granularity_mismatch_raises():
+    with pytest.raises(ValueError):
+        chunking.split(10, 4, granularity=4)
+
+
+def test_doorbell_protocol():
+    db = DoorbellRegion(8)
+    assert not db.is_ready(3)
+    db.ring(3)
+    assert db.is_ready(3)
+    db.reset(3)
+    assert not db.is_ready(3)
+    assert db.rings == 1 and db.polls == 3
+    assert db.flushes == db.rings + db.polls  # every op touches the line
+
+
+def test_doorbell_addresses_are_index_math():
+    db = DoorbellRegion(16)
+    for i in range(16):
+        assert db.address(i) == i * DOORBELL_BYTES
+    with pytest.raises(IndexError):
+        db.address(16)
+    assert db.region_bytes == 16 * DOORBELL_BYTES

@@ -1,0 +1,70 @@
+"""Prefill -> decode continuation must equal full-sequence forward, per
+architecture (exercises KV caches, ring buffers, SSM states, cross-attn
+caches and the MoE drop-free decode path)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_IDS, get_config
+from repro.models import model
+from repro.models.pcontext import UNSHARDED
+
+KEY = jax.random.key(0)
+RNG = np.random.default_rng(0)
+B, L = 2, 12
+
+
+@pytest.mark.parametrize("arch", ALL_IDS)
+def test_prefill_decode_consistency(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.moe:  # drop-free routing for exactness
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0))
+    params = model.init_params(KEY, cfg, tp=1, dtype=jnp.float32)
+    n_prefix = cfg.frontend_tokens if (cfg.frontend != "text"
+                                       and cfg.encoder is None) else 0
+    max_seq = n_prefix + L + 8
+    toks = RNG.integers(0, cfg.vocab_size, (B, L + 1))
+    extra = {}
+    if cfg.frontend == "vision_stub" and cfg.encoder is None:
+        extra["frontend"] = jnp.asarray(RNG.standard_normal(
+            (B, cfg.frontend_tokens, cfg.frontend_dim)), jnp.float32)
+    if cfg.encoder is not None:
+        extra["source"] = jnp.asarray(RNG.standard_normal(
+            (B, cfg.encoder.source_len, cfg.frontend_dim)), jnp.float32)
+
+    ref_logits, _ = jax.jit(lambda p: model.prefill(
+        p, {"tokens": jnp.asarray(toks)} | extra, cfg, UNSHARDED,
+        max_seq=max_seq, cache_dtype=jnp.float32))(params)
+    _, caches = jax.jit(lambda p: model.prefill(
+        p, {"tokens": jnp.asarray(toks[:, :L])} | extra, cfg, UNSHARDED,
+        max_seq=max_seq, cache_dtype=jnp.float32))(params)
+    logits_d, _ = jax.jit(lambda p, c: model.decode_step(
+        p, c, jnp.asarray(toks[:, L:L + 1]), jnp.int32(L + n_prefix),
+        cfg, UNSHARDED))(params, caches)
+    err = np.max(np.abs(np.asarray(ref_logits)[..., :cfg.vocab_size]
+                        - np.asarray(logits_d)))
+    assert err < 2e-3, f"{arch}: {err}"
+
+
+def test_windowed_equals_full_within_window():
+    """Sliding-window decode == full decode while pos < window."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = model.init_params(KEY, cfg, tp=1, dtype=jnp.float32)
+    toks = RNG.integers(0, cfg.vocab_size, (B, 6))
+    full = model.init_cache(cfg, UNSHARDED, B, 32,
+                            cache_dtype=jnp.float32)
+    win = model.init_cache(cfg, UNSHARDED, B, 1 << 20,
+                           cache_dtype=jnp.float32, window=32)
+    lf = lw = None
+    for i in range(6):
+        t = jnp.asarray(toks[:, i:i + 1])
+        lf, full = model.decode_step(params, full, t, jnp.int32(i), cfg,
+                                     UNSHARDED)
+        lw, win = model.decode_step(params, win, t, jnp.int32(i), cfg,
+                                    UNSHARDED, window=32)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lw),
+                               rtol=1e-4, atol=1e-5)

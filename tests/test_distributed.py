@@ -1,0 +1,43 @@
+"""Multi-device tests run in a subprocess so the forced host-device
+count never leaks into the main pytest process."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+ROOT = os.path.dirname(HERE)
+
+
+@pytest.mark.slow
+def test_mesh_runner():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_mesh_runner.py")],
+        env=env, capture_output=True, text=True, timeout=3600)
+    sys.stdout.write(proc.stdout[-4000:])
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0
+    assert "MESH RUNNER: ALL OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_reduced_mesh():
+    """End-to-end dry-run plumbing on a reduced mesh: one arch per
+    family, every shape, both mesh topologies."""
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    for arch in ("yi-6b", "granite-moe-3b-a800m", "falcon-mamba-7b"):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", "all", "--both-meshes", "--out",
+             "/tmp/dryrun_pytest"],
+            env=env, capture_output=True, text=True, timeout=3600,
+            cwd=ROOT)
+        assert proc.returncode == 0, proc.stdout[-3000:]

@@ -1,0 +1,84 @@
+"""Eq. 1-4 placement-math properties (unit + hypothesis)."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.interleave import (PoolLayout, publish_order,
+                                   rank_partitioned, round_robin)
+
+LAYOUT = PoolLayout(num_devices=6, device_capacity=1 << 20,
+                    doorbell_region=4096, block_size=1024)
+
+
+def test_round_robin_strides_devices():
+    devs = [round_robin(LAYOUT, i).device_index for i in range(12)]
+    assert devs == [0, 1, 2, 3, 4, 5] * 2
+
+
+def test_round_robin_block_ids():
+    assert round_robin(LAYOUT, 0).device_block_id == 0
+    assert round_robin(LAYOUT, 6).device_block_id == 1
+    assert round_robin(LAYOUT, 13).device_block_id == 2
+
+
+def test_eq3_location_decomposition():
+    p = round_robin(LAYOUT, 8)   # device 2, block 1
+    assert p.device_location == (LAYOUT.doorbell_region
+                                 + 1 * LAYOUT.block_size
+                                 + 2 * LAYOUT.device_capacity)
+
+
+@hp.given(st.integers(0, 500), st.integers(0, 500))
+def test_round_robin_no_collisions(i, j):
+    hp.assume(i != j)
+    a, b = round_robin(LAYOUT, i), round_robin(LAYOUT, j)
+    assert a.device_location != b.device_location
+
+
+@hp.given(st.integers(1, 12), st.integers(0, 11), st.integers(0, 50))
+def test_rank_partitioned_in_bounds(nranks, rank, data_id):
+    hp.assume(rank < nranks)
+    p = rank_partitioned(LAYOUT, rank, nranks, data_id)
+    assert 0 <= p.device_index < LAYOUT.num_devices
+    start = p.device_index * LAYOUT.device_capacity
+    assert start + LAYOUT.doorbell_region <= p.device_location
+    assert p.device_location + LAYOUT.block_size <= \
+        start + LAYOUT.device_capacity
+
+
+@hp.given(st.integers(2, 6))
+def test_rank_partitions_disjoint_devices(nranks):
+    """When nranks <= ND each rank's devices are mutually exclusive
+    (Eq. 4's stated goal)."""
+    per_rank = {}
+    for r in range(nranks):
+        per_rank[r] = {rank_partitioned(LAYOUT, r, nranks, d).device_index
+                       for d in range(20)}
+    for a in range(nranks):
+        for b in range(a + 1, nranks):
+            assert not (per_rank[a] & per_rank[b])
+
+
+@hp.given(st.integers(2, 16), st.integers(0, 15), st.integers(0, 15),
+          st.integers(0, 99), st.integers(0, 99))
+def test_rank_partitioned_no_cross_rank_collisions(nranks, r1, r2, d1, d2):
+    hp.assume(r1 < nranks and r2 < nranks)
+    hp.assume((r1, d1) != (r2, d2))
+    a = rank_partitioned(LAYOUT, r1, nranks, d1)
+    b = rank_partitioned(LAYOUT, r2, nranks, d2)
+    assert a.device_location != b.device_location
+
+
+@hp.given(st.integers(1, 32), st.integers(0, 31))
+def test_publish_order_is_rotation(nranks, rank):
+    hp.assume(rank < nranks)
+    order = publish_order(rank, nranks)
+    assert sorted(order) == list(range(nranks))
+    assert order[0] == (rank + 1) % nranks
+
+
+def test_layout_validation():
+    with pytest.raises(ValueError):
+        PoolLayout(0, 100, 0, 10)
+    with pytest.raises(ValueError):
+        PoolLayout(6, 100, 200, 10)  # doorbells exceed capacity

@@ -1,0 +1,107 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype
+sweeps + hypothesis properties."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n_src", [2, 6, 16])
+@pytest.mark.parametrize("length", [512, 4096, 9999])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunked_reduce(n_src, length, dtype):
+    x = jnp.asarray(RNG.standard_normal((n_src, length)), dtype)
+    out = ops.chunked_reduce(x, tile=512)
+    want = ref.chunked_reduce_ref(x)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16
+                               else 1e-6, atol=1e-2)
+
+
+@hp.settings(deadline=None, max_examples=15)
+@hp.given(st.integers(1, 8), st.integers(1, 100))
+def test_chunked_reduce_property(n_src, length):
+    x = jnp.asarray(RNG.standard_normal((n_src, length * 8)), jnp.float32)
+    out = ops.chunked_reduce(x, tile=256)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x).sum(0),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bh,l,d", [(4, 256, 64), (2, 512, 128),
+                                    (1, 384, 64)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 128),
+                                           (False, None)])
+def test_flash_kernel(bh, l, d, causal, window):
+    q = jnp.asarray(RNG.standard_normal((bh, l, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((bh, l, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((bh, l, d)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=2e-5)
+
+
+def test_flash_kernel_bf16():
+    q = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("b,l,d,n", [(2, 256, 256, 16), (1, 128, 512, 8),
+                                     (2, 64, 128, 4)])
+def test_ssm_scan_kernel(b, l, d, n):
+    x = jnp.asarray(RNG.standard_normal((b, l, d)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, l, d))) * 0.1,
+                     jnp.float32)
+    a = -jnp.asarray(np.abs(RNG.standard_normal((d, n))), jnp.float32)
+    bs = jnp.asarray(RNG.standard_normal((b, l, n)), jnp.float32)
+    cs = jnp.asarray(RNG.standard_normal((b, l, n)), jnp.float32)
+    dres = jnp.asarray(RNG.standard_normal((d,)), jnp.float32)
+    out = ops.ssm_scan(x, dt, a, bs, cs, dres, block_d=128, block_l=64)
+    want = ref.ssm_scan_ref(x, dt, a, bs, cs, dres)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_scan_state_carries_across_blocks():
+    """Splitting L into multiple grid blocks must not reset the state."""
+    b, l, d, n = 1, 128, 128, 8
+    x = jnp.asarray(RNG.standard_normal((b, l, d)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, l, d))) * 0.1,
+                     jnp.float32)
+    a = -jnp.ones((d, n), jnp.float32)
+    bs = jnp.ones((b, l, n), jnp.float32)
+    cs = jnp.ones((b, l, n), jnp.float32)
+    dres = jnp.zeros((d,), jnp.float32)
+    one_block = ops.ssm_scan(x, dt, a, bs, cs, dres, block_d=128,
+                             block_l=128)
+    four_blocks = ops.ssm_scan(x, dt, a, bs, cs, dres, block_d=128,
+                               block_l=32)
+    np.testing.assert_allclose(np.asarray(one_block),
+                               np.asarray(four_blocks), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("t,d", [(64, 128), (300, 256), (1000, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rms_norm_kernel(t, d, dtype):
+    x = jnp.asarray(RNG.standard_normal((t, d)), dtype)
+    scale = jnp.asarray(RNG.standard_normal((d,)), jnp.float32)
+    out = ops.rms_norm(x, scale, rows=128)
+    want = ref.rms_norm_ref(x, scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16
+                               else 1e-5, atol=1e-2)

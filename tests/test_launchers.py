@@ -1,0 +1,44 @@
+"""Launcher CLIs run end-to-end on a small forced-device mesh."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(__file__))
+
+
+def _env(devices=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    if devices:
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={devices}"
+    return env
+
+
+@pytest.mark.slow
+def test_train_launcher_sharded(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "llama3.2-1b", "--smoke", "--steps", "6", "--batch", "4",
+         "--seq", "32", "--mesh", "2x4", "--backend", "cxl",
+         "--ckpt", str(tmp_path)],
+        env=_env(8), capture_output=True, text=True, timeout=1200,
+        cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "loss" in proc.stdout
+    assert os.path.isdir(os.path.join(tmp_path, "step_00000006"))
+
+
+@pytest.mark.slow
+def test_serve_launcher():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-6b",
+         "--smoke", "--batch", "2", "--prompt-len", "8",
+         "--new-tokens", "4"],
+        env=_env(), capture_output=True, text=True, timeout=1200,
+        cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "tok/s" in proc.stdout

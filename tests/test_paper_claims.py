@@ -1,0 +1,56 @@
+"""EXPERIMENTS.md validation: the simulated system must reproduce the
+paper's headline numbers (Sec. 5.2, 5.3, 5.4, 5.5) within tolerance."""
+import numpy as np
+import pytest
+
+from benchmarks import fig9_collectives, fig10_scalability, fig11_chunks
+from benchmarks.llm_case_study import step_times
+from repro.core.hw import COST
+
+
+@pytest.mark.parametrize("prim,paper",
+                         list(fig9_collectives.PAPER_MEANS.items()))
+def test_fig9_mean_speedups(prim, paper):
+    t = fig9_collectives.table(prim)
+    assert t["mean_speedup"] == pytest.approx(paper, rel=0.10), \
+        f"{prim}: simulated {t['mean_speedup']:.2f} vs paper {paper}"
+
+
+def test_fig9_small_message_losses():
+    """Paper: ReduceScatter/Scatter/AllToAll lose to IB at 1 MB."""
+    for prim in ("reduce_scatter", "scatter", "all_to_all"):
+        t = fig9_collectives.table(prim)
+        assert t["rows"][0]["speedup"] < 1.0, prim
+
+
+def test_fig9_allreduce_parity_at_large():
+    """Paper: ~1.05x beyond 256 MB."""
+    t = fig9_collectives.table("all_reduce")
+    large = [r["speedup"] for r in t["rows"][-3:]]
+    assert all(0.9 < s < 1.35 for s in large), large
+
+
+def test_fig10_allreduce_scaling():
+    s = fig10_scalability.scaling("all_reduce")
+    assert 2.0 <= float(np.mean(s["r6"])) <= 3.2    # paper 2.1-3.0
+    assert 8.0 <= float(np.mean(s["r12"])) <= 13.0  # paper 8.7-12.2
+
+
+def test_fig10_broadcast_scales_mildly():
+    s = fig10_scalability.scaling("broadcast")
+    assert float(np.mean(s["r6"])) < 1.6            # paper 1.26-1.40
+    assert float(np.mean(s["r12"])) < 3.0           # paper ~2.5
+
+
+def test_fig11_single_chunk_worst():
+    times = {f: fig11_chunks.simulator.run_variant(
+        "all", "all_gather", 3, 1024 * fig11_chunks.MiB,
+        slicing_factor=f).total_time for f in (1, 4, 8)}
+    assert times[1] == max(times.values())
+    assert times[4] < times[1] and times[8] < times[1]
+
+
+def test_llm_case_study():
+    r = step_times()
+    assert r["speedup"] == pytest.approx(1.11, abs=0.03)
+    assert COST.cost_ratio == pytest.approx(2.75, abs=0.05)

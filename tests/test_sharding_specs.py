@@ -1,0 +1,91 @@
+"""Parameter-sharding spec rules: Megatron TP dims, FSDP overlay,
+stacked-group handling, and divisibility of every sharded dim for every
+architecture on the production mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import tree_flatten_with_path, DictKey
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model, sharding
+
+
+def _specs(arch, tp=16, dp=("pod", "data"), fsdp=True):
+    cfg = get_config(arch)
+    sharding.set_mesh_sizes({"pod": 2, "data": 16, "model": tp})
+    abstract = model.abstract_params(cfg, tp=tp, dtype=jnp.bfloat16)
+    return cfg, abstract, sharding.param_specs(
+        abstract, cfg, dp_axis=dp, fsdp=fsdp)
+
+
+def test_megatron_rules_dense():
+    cfg, params, specs = _specs("llama3-8b")
+    g0 = specs["g0"]
+    assert g0["attn"]["wq"][2] == "model"     # (L, d, H*hd) column
+    assert g0["attn"]["wo"][1] == "model"     # (L, H*hd, d) row
+    assert g0["ffn"]["wg"][2] == "model"
+    assert g0["ffn"]["wd"][1] == "model"
+    assert specs["embed"]["tok"][0] == "model"   # vocab sharded
+    # llama3-8b kv=8 < 16 -> replicated over model
+    assert "model" not in tuple(g0["attn"]["wk"])
+
+
+def test_moe_expert_parallel_dim():
+    cfg, params, specs = _specs("arctic-480b")
+    g0 = specs["g0"]
+    assert g0["moe"]["wg"][1] == "model"      # (L, E, d, ff): expert dim
+    assert g0["moe"]["wd"][1] == "model"
+    assert "model" not in tuple(g0["moe"]["router"])  # replicated
+
+
+def test_mamba_channel_parallel():
+    cfg, params, specs = _specs("falcon-mamba-7b")
+    g0 = specs["g0"]["mamba"]
+    assert g0["in_x"][2] == "model"
+    assert g0["x_proj"][1] == "model"         # row-parallel input dim
+    assert g0["out_proj"][1] == "model"
+    assert g0["A_log"][1] == "model"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_all_sharded_dims_divide_production_mesh(arch):
+    """Every sharded dim of every param must divide its mesh axes on the
+    2x16x16 mesh - the invariant the dry-run depends on."""
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    cfg, params, specs = _specs(arch)
+    flat_p, _ = tree_flatten_with_path(params)
+    flat_s, _ = tree_flatten_with_path(specs)
+    for (path, leaf), (_, spec) in zip(flat_p, flat_s):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([sizes[a] for a in axes]))
+            assert leaf.shape[dim] % n == 0, \
+                (arch, [getattr(k, 'key', k) for k in path], dim,
+                 leaf.shape, spec)
+
+
+def test_row_specs_drop_layer_dim():
+    cfg, params, specs = _specs("yi-6b")
+    rows = sharding.row_specs(specs)
+    assert len(rows["g0"]["attn"]["wq"]) == \
+        len(specs["g0"]["attn"]["wq"]) - 1
+    # unstacked leaves unchanged
+    assert rows["embed"]["tok"] == specs["embed"]["tok"]
+
+
+def test_fsdp_skips_small_and_frontend():
+    cfg, params, specs = _specs("whisper-tiny")
+    flat_p, _ = tree_flatten_with_path(params)
+    flat_s, _ = tree_flatten_with_path(specs)
+    for (path, leaf), (_, spec) in zip(flat_p, flat_s):
+        names = [k.key for k in path if isinstance(k, DictKey)]
+        dp_used = any(isinstance(s, tuple) or s in ("pod", "data")
+                      for s in spec if s is not None)
+        if "encoder" in names or "enc_proj" in names:
+            assert not dp_used, names
+        if leaf.size < sharding.FSDP_MIN_SIZE:
+            assert not dp_used, (names, leaf.size)

@@ -1,0 +1,61 @@
+"""Event-driven simulator invariants + paper-claim validation."""
+import numpy as np
+import pytest
+
+from repro.core import ibmodel, simulator
+from repro.core.hw import MiB
+
+PRIMS = ["all_reduce", "all_gather", "reduce_scatter", "all_to_all",
+         "broadcast", "reduce", "gather", "scatter"]
+
+
+@pytest.mark.parametrize("prim", PRIMS)
+def test_monotone_in_message_size(prim):
+    t = [simulator.run_variant("all", prim, 3, s).total_time
+         for s in (4 * MiB, 64 * MiB, 1024 * MiB)]
+    assert t[0] < t[1] < t[2]
+
+
+@pytest.mark.parametrize("prim", PRIMS)
+def test_variant_ordering(prim):
+    """CXL-CCL-All <= Aggregate <= Naive (Sec. 5.2)."""
+    s = 256 * MiB
+    t_all = simulator.run_variant("all", prim, 3, s).total_time
+    t_agg = simulator.run_variant("aggregate", prim, 3, s).total_time
+    t_nai = simulator.run_variant("naive", prim, 3, s).total_time
+    assert t_all <= t_agg * 1.001
+    assert t_agg <= t_nai * 1.001
+
+
+@pytest.mark.parametrize("prim", PRIMS)
+def test_no_deadlock_and_bytes_accounted(prim):
+    r = simulator.run_variant("all", prim, 4, 16 * MiB)
+    assert r.total_time > 0
+    assert r.bytes_moved > 0
+    assert all(v >= 0 for v in r.rank_finish.values())
+
+
+def test_interleaving_beats_hotspot():
+    """Bandwidth aggregation: interleaved AllGather >> naive (device-0
+    hot spot) at large sizes."""
+    t_all = simulator.run_variant("all", "all_gather", 3,
+                                  1024 * MiB).total_time
+    t_nai = simulator.run_variant("naive", "all_gather", 3,
+                                  1024 * MiB).total_time
+    assert t_nai / t_all > 2.0
+
+
+def test_overlap_beats_barrier():
+    """Chunked overlap (Sec. 4.4): slicing 8 beats slicing 1."""
+    t8 = simulator.run_variant("all", "broadcast", 3, 1024 * MiB,
+                               slicing_factor=8).total_time
+    t1 = simulator.run_variant("all", "broadcast", 3, 1024 * MiB,
+                               slicing_factor=1).total_time
+    assert t8 < t1
+
+
+def test_ib_model_basics():
+    t_small = ibmodel.estimate("all_reduce", 3, 1 * MiB).time
+    t_big = ibmodel.estimate("all_reduce", 3, 1024 * MiB).time
+    assert t_small < t_big
+    assert ibmodel.estimate("all_reduce", 1, MiB).time == 0.0
