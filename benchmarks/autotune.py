@@ -1,0 +1,66 @@
+"""Autotuner audit: predicted speedup of ``backend='auto'`` over the
+fixed backends across the Fig. 9 sweep.
+
+For every (primitive, size) cell at 3 nodes (plus 6/12 in the full run)
+we compare the plan's chosen configuration against fixed-``ring`` (the
+NCCL-over-IB baseline) and fixed-``cxl`` at the Communicator's default
+knobs (slicing_factor=4, two_phase).  Because the tuning grid contains
+both fixed configurations as candidates, ``auto`` can never be slower
+than the better of the two under the cost model - the emitted
+``autotune_max_regret`` must be <= 1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import mesh_collectives as mc
+from repro.core.hw import MiB
+from repro.core.schedule import PRIMITIVES
+from repro import tuner
+
+SIZES = [1 * MiB, 4 * MiB, 16 * MiB, 64 * MiB, 256 * MiB, 1024 * MiB,
+         4096 * MiB]
+SMOKE_SIZES = [1 * MiB, 16 * MiB, 256 * MiB]
+
+
+def run(emit, smoke: bool = False) -> None:
+    sizes = SMOKE_SIZES if smoke else SIZES
+    nranks = (3,) if smoke else (3, 6, 12)
+    factors = (1, 4) if smoke else (1, 2, 4, 8, 16)
+    grid = tuner.TuneGrid(sizes=tuple(sizes), nranks=nranks,
+                          slicing_factors=factors)
+    plan = tuner.generate_plan(grid)
+
+    max_regret = 0.0
+    cxl_cells = 0
+    for prim in PRIMITIVES:
+        sp_ring, sp_cxl, sp_best = [], [], []
+        for n in nranks:
+            for size in sizes:
+                choice = plan.lookup(prim, size, n)
+                t_auto = choice.predicted_time
+                t_ring = tuner.predict_time("ring", prim, n, size)
+                t_cxl = tuner.predict_time(
+                    "cxl", prim, n, size,
+                    slicing_factor=mc.DEFAULT_CHUNKS,
+                    allreduce_mode="two_phase")
+                if choice.backend == "cxl":
+                    cxl_cells += 1
+                sp_ring.append(t_ring / t_auto)
+                sp_cxl.append(t_cxl / t_auto)
+                best_fixed = min(t_ring, t_cxl)
+                sp_best.append(best_fixed / t_auto)
+                max_regret = max(max_regret, t_auto / best_fixed)
+        emit(f"autotune_{prim}_speedup_vs_ring",
+             float(np.mean(sp_ring)), "auto vs fixed-ring (IB)")
+        emit(f"autotune_{prim}_speedup_vs_cxl",
+             float(np.mean(sp_cxl)), "auto vs fixed-cxl (factor 4)")
+        emit(f"autotune_{prim}_speedup_vs_best_fixed",
+             float(np.mean(sp_best)), "auto vs per-cell best fixed")
+    total = len(PRIMITIVES) * len(nranks) * len(sizes)
+    emit("autotune_max_regret", max_regret,
+         "max t_auto/best_fixed; must be <= 1")
+    emit("autotune_cxl_cell_fraction", cxl_cells / total,
+         "fraction of cells where the plan picks cxl")
+    assert max_regret <= 1.0 + 1e-9, (
+        f"auto slower than a fixed backend somewhere: {max_regret}")

@@ -1,18 +1,23 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,value,notes`` CSV.  Modules:
-  fig3  - pool characterization (Fig. 3, Table 1, Obs. 1-2)
-  fig9  - 8 collectives vs IB + internal variants (Fig. 9)
-  fig10 - scalability 3/6/12 nodes (Fig. 10)
-  fig11 - slicing-factor sensitivity (Fig. 11)
-  llm   - FSDP Llama-3-8B case study (Sec. 5.5)
+  fig3     - pool characterization (Fig. 3, Table 1, Obs. 1-2)
+  fig9     - 8 collectives vs IB + internal variants (Fig. 9)
+  fig10    - scalability 3/6/12 nodes (Fig. 10)
+  fig11    - slicing-factor sensitivity (Fig. 11)
+  llm      - FSDP Llama-3-8B case study (Sec. 5.5)
+  autotune - plan-driven backend='auto' vs fixed backends
+
+``--smoke`` runs the fast CI path: coarse-grid plan generation +
+the autotune audit (exercises the whole tuner stack in seconds).
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import inspect
 import time
 
-from benchmarks import (fig3_characterization, fig9_collectives,
+from benchmarks import (autotune, fig3_characterization, fig9_collectives,
                         fig10_scalability, fig11_chunks, llm_case_study)
 
 MODULES = [
@@ -21,11 +26,20 @@ MODULES = [
     ("fig10", fig10_scalability),
     ("fig11", fig11_chunks),
     ("llm", llm_case_study),
+    ("autotune", autotune),
 ]
+
+SMOKE_MODULES = ("fig3", "autotune")
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser()
+    ap.add_argument("module", nargs="?", default=None,
+                    help="run a single module (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI path: coarse grids, subset of modules")
+    args = ap.parse_args()
+
     print("name,value,notes")
 
     def emit(name, value, notes=""):
@@ -33,10 +47,16 @@ def main() -> None:
         print(f"{name},{v},{notes}")
 
     for key, mod in MODULES:
-        if only and key != only:
+        if args.module and key != args.module:
+            continue
+        if args.smoke and not args.module and key not in SMOKE_MODULES:
             continue
         t0 = time.time()
-        mod.run(emit)
+        kwargs = {}
+        if args.smoke and \
+                "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
+        mod.run(emit, **kwargs)
         emit(f"{key}_wall_s", time.time() - t0, "benchmark wall time")
 
 

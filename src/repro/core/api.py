@@ -7,17 +7,23 @@ Every collective in the training/serving stack goes through a
 * ``cxl``  - the paper's schedules realized as chunked ppermute rounds
              (``core.mesh_collectives``), with the slicing factor and the
              faithful-vs-two-phase AllReduce both selectable.
+* ``auto`` - per-call selection from an autotuning ``Plan``
+             (``repro.tuner``): each (primitive, message size, axis size)
+             resolves, at trace time, to the predicted-fastest
+             (backend, slicing_factor, allreduce_mode) under the offline
+             cost model, and the ledger records the decision taken.
 
 Axes may be a single name or a tuple (e.g. ``("pod", "data")`` for the
 multi-pod FSDP axis); tuple axes are handled hierarchically, innermost
 axis first - on the real cluster that is "within the rack-scale CXL pool
 first, across pods second", matching the paper's expectation that one pool
-spans a small number of nodes (Sec. 5.3).
+spans a small number of nodes (Sec. 5.3).  Under ``auto`` each level of
+the hierarchy is tuned independently (the axis sizes differ).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Union
+from typing import TYPE_CHECKING, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +32,12 @@ from jax import lax
 from repro.core import ledger
 from repro.core import mesh_collectives as mc
 
+if TYPE_CHECKING:                     # avoid import cycle at runtime
+    from repro.tuner.plan import Plan
+
 AxisSpec = Union[str, Sequence[str]]
 
-BACKENDS = ("ring", "cxl")
+BACKENDS = ("ring", "cxl", "auto")
 
 
 def _axes(axis: AxisSpec) -> tuple[str, ...]:
@@ -40,29 +49,71 @@ class Communicator:
     backend: str = "ring"
     slicing_factor: int = mc.DEFAULT_CHUNKS
     allreduce_mode: str = "two_phase"   # 'faithful' reproduces Sec. 5.2
+    # Autotuning plan for backend='auto'; falls back to the process-wide
+    # active plan (repro.tuner.runtime) when None.  Excluded from
+    # eq/hash: the plan only steers trace-time dispatch.
+    plan: Optional["Plan"] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}")
         if self.allreduce_mode not in ("faithful", "two_phase"):
             raise ValueError("allreduce_mode: 'faithful' or 'two_phase'")
+        if not isinstance(self.slicing_factor, int) or \
+                isinstance(self.slicing_factor, bool) or \
+                self.slicing_factor < 1:
+            raise ValueError(
+                f"slicing_factor must be an integer >= 1, got "
+                f"{self.slicing_factor!r}")
+
+    # -- plan resolution --------------------------------------------------
+
+    def _choice(self, primitive: str, msg_bytes: int,
+                n: int) -> tuple[str, int, str]:
+        """Resolve (backend, slicing_factor, allreduce_mode) for one
+        collective call.  Static under ``jit`` (sizes and axis sizes are
+        trace-time constants), so this costs nothing at run time."""
+        if self.backend != "auto":
+            return self.backend, self.slicing_factor, self.allreduce_mode
+        plan = self.plan
+        if plan is None:
+            from repro.tuner import runtime as tuner_runtime
+            plan = tuner_runtime.ensure_default_plan()
+        ch = plan.lookup(primitive, msg_bytes, n)
+        if ch is None:     # primitive absent from the plan: ring baseline
+            backend, factor, mode = ("ring", self.slicing_factor,
+                                     self.allreduce_mode)
+        else:
+            backend, factor, mode = (ch.backend, ch.slicing_factor,
+                                     ch.allreduce_mode)
+        ledger.record_choice(primitive, msg_bytes, n, backend, factor,
+                             mode)
+        return backend, factor, mode
 
     # -- N->N primitives (the FSDP / TP / MoE hot path) ------------------
 
     def all_reduce(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
         s = ledger.nbytes(x)
-        for ax in _axes(axis):
-            n = lax.axis_size(ax)
-            wire = s * (n - 1) if self.allreduce_mode == "faithful" and \
-                self.backend == "cxl" else 2 * s * (n - 1) / n
-            ledger.record("all_reduce", wire)
         if self.backend == "ring":
+            # single fused psum over the whole (possibly tuple) axis: one
+            # reduction order, matching XLA's own lowering exactly
+            for ax in _axes(axis):
+                n = lax.axis_size(ax)
+                ledger.record("all_reduce", 2 * s * (n - 1) / n)
             return lax.psum(x, axis if isinstance(axis, str)
                             else tuple(axis))
         out = x
         for ax in _axes(axis):  # innermost (pool-local) axis first
-            out = mc.all_reduce(out, ax, mode=self.allreduce_mode,
-                                n_chunks=self.slicing_factor)
+            n = lax.axis_size(ax)
+            backend, factor, mode = self._choice("all_reduce", s, n)
+            wire = s * (n - 1) if mode == "faithful" and \
+                backend == "cxl" else 2 * s * (n - 1) / n
+            ledger.record("all_reduce", wire)
+            if backend == "ring":
+                out = lax.psum(out, ax)
+            else:
+                out = mc.all_reduce(out, ax, mode=mode, n_chunks=factor)
         return out
 
     def all_gather(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
@@ -74,12 +125,13 @@ class Communicator:
         # stacks whole pool-level blocks, matching P((outer, inner)) layout.
         for ax in reversed(axes):
             n = lax.axis_size(ax)
-            ledger.record("all_gather", ledger.nbytes(out) * (n - 1))
-            if self.backend == "ring":
+            s = ledger.nbytes(out)
+            backend, factor, _ = self._choice("all_gather", s, n)
+            ledger.record("all_gather", s * (n - 1))
+            if backend == "ring":
                 out = lax.all_gather(out, ax, tiled=True)
             else:
-                out = mc.all_gather(out, ax,
-                                    n_chunks=self.slicing_factor)
+                out = mc.all_gather(out, ax, n_chunks=factor)
         return out
 
     def reduce_scatter(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
@@ -89,14 +141,14 @@ class Communicator:
         out = x
         for ax in axes:  # outer axis first: inverse of gather
             n = lax.axis_size(ax)
-            ledger.record("reduce_scatter",
-                          ledger.nbytes(out) * (n - 1) / n)
-            if self.backend == "ring":
+            s = ledger.nbytes(out)
+            backend, factor, _ = self._choice("reduce_scatter", s, n)
+            ledger.record("reduce_scatter", s * (n - 1) / n)
+            if backend == "ring":
                 out = lax.psum_scatter(out, ax, scatter_dimension=0,
                                        tiled=True)
             else:
-                out = mc.reduce_scatter(out, ax,
-                                        n_chunks=self.slicing_factor)
+                out = mc.reduce_scatter(out, ax, n_chunks=factor)
         return out
 
     def all_to_all(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
@@ -105,16 +157,18 @@ class Communicator:
             raise NotImplementedError("all_to_all is single-axis")
         ax = axes[0]
         n_ = lax.axis_size(ax)
-        ledger.record("all_to_all", ledger.nbytes(x) * (n_ - 1) / n_)
-        if self.backend == "ring":
-            n = lax.axis_size(ax)
+        s = ledger.nbytes(x)
+        backend, factor, _ = self._choice("all_to_all", s, n_)
+        ledger.record("all_to_all", s * (n_ - 1) / n_)
+        if backend == "ring":
+            n = n_
             if x.shape[0] % n:
                 raise ValueError("leading dim must divide axis size")
             segs = x.reshape((n, x.shape[0] // n) + x.shape[1:])
             out = lax.all_to_all(segs, ax, split_axis=0, concat_axis=0,
                                  tiled=False)
             return out.reshape(x.shape)
-        return mc.all_to_all(x, ax, n_chunks=self.slicing_factor)
+        return mc.all_to_all(x, ax, n_chunks=factor)
 
     # -- rooted primitives ------------------------------------------------
 
@@ -124,12 +178,15 @@ class Communicator:
         if len(axes) != 1:
             raise NotImplementedError("broadcast is single-axis")
         ax = axes[0]
+        n_ = lax.axis_size(ax)
+        backend, factor, _ = self._choice("broadcast", ledger.nbytes(x),
+                                          n_)
         ledger.record("broadcast", ledger.nbytes(x))
-        if self.backend == "ring":
+        if backend == "ring":
             idx = lax.axis_index(ax)
             masked = jnp.where(idx == root, x, jnp.zeros_like(x))
             return lax.psum(masked, ax)
-        return mc.broadcast(x, ax, root=root, n_chunks=self.slicing_factor)
+        return mc.broadcast(x, ax, root=root, n_chunks=factor)
 
     def reduce(self, x: jnp.ndarray, axis: AxisSpec,
                root: int = 0) -> jnp.ndarray:
@@ -138,12 +195,14 @@ class Communicator:
             raise NotImplementedError("reduce is single-axis")
         ax = axes[0]
         n_ = lax.axis_size(ax)
-        ledger.record("reduce", 2 * ledger.nbytes(x) * (n_ - 1) / n_)
-        if self.backend == "ring":
+        s = ledger.nbytes(x)
+        backend, factor, _ = self._choice("reduce", s, n_)
+        ledger.record("reduce", 2 * s * (n_ - 1) / n_)
+        if backend == "ring":
             idx = lax.axis_index(ax)
             total = lax.psum(x, ax)
             return jnp.where(idx == root, total, jnp.zeros_like(total))
-        return mc.reduce(x, ax, root=root, n_chunks=self.slicing_factor)
+        return mc.reduce(x, ax, root=root, n_chunks=factor)
 
     def gather(self, x: jnp.ndarray, axis: AxisSpec,
                root: int = 0) -> jnp.ndarray:
@@ -152,12 +211,14 @@ class Communicator:
             raise NotImplementedError("gather is single-axis")
         ax = axes[0]
         n_ = lax.axis_size(ax)
-        ledger.record("gather", ledger.nbytes(x) * (n_ - 1))
-        if self.backend == "ring":
+        s = ledger.nbytes(x)
+        backend, factor, _ = self._choice("gather", s, n_)
+        ledger.record("gather", s * (n_ - 1))
+        if backend == "ring":
             idx = lax.axis_index(ax)
             full = lax.all_gather(x, ax, tiled=True)
             return jnp.where(idx == root, full, jnp.zeros_like(full))
-        return mc.gather(x, ax, root=root, n_chunks=self.slicing_factor)
+        return mc.gather(x, ax, root=root, n_chunks=factor)
 
     def scatter(self, x: jnp.ndarray, axis: AxisSpec,
                 root: int = 0) -> jnp.ndarray:
@@ -165,16 +226,19 @@ class Communicator:
         if len(axes) != 1:
             raise NotImplementedError("scatter is single-axis")
         ax = axes[0]
-        if self.backend == "ring":
-            n = lax.axis_size(ax)
+        n_ = lax.axis_size(ax)
+        backend, factor, _ = self._choice("scatter", ledger.nbytes(x), n_)
+        if backend == "ring":
+            n = n_
             idx = lax.axis_index(ax)
             rooted = self.broadcast(x, ax, root=root)
             segs = rooted.reshape((n, x.shape[0] // n) + x.shape[1:])
             return lax.dynamic_index_in_dim(segs, idx, 0, keepdims=False)
-        return mc.scatter(x, ax, root=root, n_chunks=self.slicing_factor)
+        return mc.scatter(x, ax, root=root, n_chunks=factor)
 
 
 def make_communicator(backend: str = "ring", *, slicing_factor: int = 4,
-                      allreduce_mode: str = "two_phase") -> Communicator:
+                      allreduce_mode: str = "two_phase",
+                      plan: Optional["Plan"] = None) -> Communicator:
     return Communicator(backend=backend, slicing_factor=slicing_factor,
-                        allreduce_mode=allreduce_mode)
+                        allreduce_mode=allreduce_mode, plan=plan)

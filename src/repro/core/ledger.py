@@ -24,12 +24,14 @@ from collections import defaultdict
 _BYTES: dict = defaultdict(float)
 _COUNTS: dict = defaultdict(int)
 _MULT: list = [1.0]
+_CHOICES: list = []   # autotuner decisions, for benchmark audit
 
 
 def reset() -> None:
     _BYTES.clear()
     _COUNTS.clear()
     _MULT[:] = [1.0]
+    _CHOICES.clear()
 
 
 @contextlib.contextmanager
@@ -47,9 +49,20 @@ def record(kind: str, wire_bytes: float) -> None:
     _COUNTS[kind] += 1
 
 
+def record_choice(primitive: str, msg_bytes: int, nranks: int,
+                  backend: str, slicing_factor: int, mode: str) -> None:
+    """Audit trail of ``backend='auto'`` decisions (trace time, like
+    ``record``): which concrete (backend, knobs) each collective got."""
+    _CHOICES.append({"primitive": primitive, "msg_bytes": int(msg_bytes),
+                     "nranks": int(nranks), "backend": backend,
+                     "slicing_factor": int(slicing_factor),
+                     "allreduce_mode": mode})
+
+
 def snapshot() -> dict:
     return {"wire_bytes": dict(_BYTES), "counts": dict(_COUNTS),
-            "total_wire_bytes": float(sum(_BYTES.values()))}
+            "total_wire_bytes": float(sum(_BYTES.values())),
+            "auto_choices": list(_CHOICES)}
 
 
 def nbytes(x) -> int:

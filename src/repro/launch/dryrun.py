@@ -360,7 +360,12 @@ def main() -> None:
                     default="all")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
-    ap.add_argument("--backend", choices=["ring", "cxl"], default="ring")
+    ap.add_argument("--backend", choices=["ring", "cxl", "auto"],
+                    default="ring")
+    ap.add_argument("--plan", default=None,
+                    help="autotuning plan for --backend auto; the "
+                         "per-collective decisions land in the record's "
+                         "ledger.auto_choices")
     ap.add_argument("--mesh-shape", default=None,
                     help="DPxTP single-pod logical mesh override")
     ap.add_argument("--allreduce-mode", default="two_phase",
@@ -368,6 +373,10 @@ def main() -> None:
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
+    if args.plan:
+        from repro.core.hw import CXL_POOL, INFINIBAND
+        from repro.tuner import activate_plan_file
+        activate_plan_file(args.plan, pool=CXL_POOL, ib=INFINIBAND)
     archs = ARCH_IDS if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

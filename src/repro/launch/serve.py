@@ -27,6 +27,11 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--plan", default=None,
+                    help="autotuning plan JSON (repro.launch.tune); "
+                         "switches the engine's Communicator to "
+                         "backend='auto' (takes effect when serving "
+                         "sharded, i.e. with a tp>1 ParallelContext)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-step", type=int, default=None)
     args = ap.parse_args()
@@ -42,7 +47,8 @@ def main() -> None:
         print(f"restored {args.ckpt} step {step}")
     eng = ServeEngine(cfg, params, ServeConfig(
         max_seq=args.prompt_len + args.new_tokens + 8,
-        window=args.window, temperature=args.temperature))
+        window=args.window, temperature=args.temperature,
+        plan_path=args.plan))
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(rng.integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)))}

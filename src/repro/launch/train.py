@@ -36,8 +36,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--backend", choices=["ring", "cxl"],
+    ap.add_argument("--backend", choices=["ring", "cxl", "auto"],
                     default="ring")
+    ap.add_argument("--plan", default=None,
+                    help="autotuning plan JSON (see repro.launch.tune); "
+                         "used by --backend auto")
     ap.add_argument("--slicing-factor", type=int, default=4)
     ap.add_argument("--allreduce-mode", default="two_phase",
                     choices=["two_phase", "faithful"])
@@ -58,7 +61,8 @@ def main() -> None:
                        total_steps=args.steps, backend=args.backend,
                        slicing_factor=args.slicing_factor,
                        allreduce_mode=args.allreduce_mode,
-                       microbatches=args.microbatches, clip_norm=None)
+                       microbatches=args.microbatches, clip_norm=None,
+                       plan_path=args.plan)
     step, pspecs, bspecs, pc = make_sharded_train_step(
         cfg, tcfg, mesh, dp_axis=dp_axes(mesh))
     tp = mesh.shape["model"]

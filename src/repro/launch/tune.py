@@ -1,0 +1,73 @@
+"""Offline autotuning CLI: sweep the cost model, persist a Plan.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.tune --out plan.json
+  PYTHONPATH=src python -m repro.launch.tune --smoke   # coarse, fast
+  PYTHONPATH=src python -m repro.launch.tune \
+      --primitives all_reduce all_gather --nranks 3 6 12 \
+      --sizes-mib 1 16 256 4096 --factors 1 4 16 --out plan.json
+
+Without ``--out`` the plan lands in the fingerprint-keyed cache
+(``repro.tuner.default_plan_path``) where ``backend='auto'`` finds it
+automatically.  Feed the saved path to ``repro.launch.train --backend
+auto --plan ...`` or ``repro.launch.serve --plan ...``.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import time
+
+from repro.core.hw import MiB
+from repro.core.schedule import PRIMITIVES
+from repro import tuner
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="plan JSON path (default: the plan cache)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="coarse grid (seconds instead of minutes)")
+    ap.add_argument("--primitives", nargs="+", choices=PRIMITIVES,
+                    default=None)
+    ap.add_argument("--sizes-mib", type=int, nargs="+", default=None)
+    ap.add_argument("--nranks", type=int, nargs="+", default=None)
+    ap.add_argument("--factors", type=int, nargs="+", default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    base = tuner.SMOKE_GRID if args.smoke else tuner.DEFAULT_GRID
+    grid = tuner.TuneGrid(
+        primitives=tuple(args.primitives) if args.primitives
+        else base.primitives,
+        sizes=tuple(m * MiB for m in args.sizes_mib) if args.sizes_mib
+        else base.sizes,
+        nranks=tuple(args.nranks) if args.nranks else base.nranks,
+        slicing_factors=tuple(args.factors) if args.factors
+        else base.slicing_factors)
+
+    progress = None if args.quiet else (lambda msg: print(f"  {msg}"))
+    t0 = time.time()
+    plan = tuner.generate_plan(grid, progress=progress)
+    dt = time.time() - t0
+
+    out = args.out or tuner.default_plan_path()
+    tuner.save_plan(plan, out)
+
+    by_backend = collections.Counter(
+        c.backend for c in plan.entries.values())
+    gains = [c.baseline_time / c.predicted_time
+             for c in plan.entries.values() if c.predicted_time > 0]
+    print(f"tuned {len(plan.entries)} cells in {dt:.1f}s "
+          f"-> {out}")
+    print(f"  fingerprint {plan.fingerprint}")
+    print(f"  choices: {dict(by_backend)}")
+    if gains:
+        print(f"  predicted gain vs best fixed knobs: "
+              f"mean {sum(gains) / len(gains):.3f}x, "
+              f"max {max(gains):.3f}x")
+
+
+if __name__ == "__main__":
+    main()

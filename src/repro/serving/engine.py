@@ -26,6 +26,9 @@ class ServeConfig:
     window: Optional[int] = None          # sliding-window cache size
     temperature: float = 0.0              # 0 = greedy
     cache_dtype: str = "float32"
+    # Autotuning plan (repro.launch.tune output).  When set, the engine's
+    # Communicator switches to backend='auto' driven by this plan.
+    plan_path: Optional[str] = None
 
 
 class ServeEngine:
@@ -34,6 +37,17 @@ class ServeEngine:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
+        if scfg.plan_path is not None:
+            from repro.core.hw import CXL_POOL, INFINIBAND
+            from repro.tuner import load_plan
+            pc = dataclasses.replace(
+                pc, comm=dataclasses.replace(
+                    pc.comm, backend="auto",
+                    plan=load_plan(scfg.plan_path, pool=CXL_POOL,
+                                   ib=INFINIBAND)))
+            if pc.tp_axis is None or pc.tp == 1:
+                print("[serve] plan loaded but the engine is unsharded "
+                      "(tp=1): no collectives to autotune")
         self.pc = pc
         cd = jnp.dtype(scfg.cache_dtype)
         self._prefill = jax.jit(

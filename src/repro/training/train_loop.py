@@ -35,9 +35,10 @@ class TrainConfig:
     clip_norm: Optional[float] = 1.0     # unsharded path only
     remat: bool = True
     microbatches: int = 1                # gradient accumulation splits
-    backend: str = "ring"                # 'ring' | 'cxl'
+    backend: str = "ring"                # 'ring' | 'cxl' | 'auto'
     slicing_factor: int = 4
     allreduce_mode: str = "two_phase"
+    plan_path: Optional[str] = None      # autotuning plan for 'auto'
 
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
@@ -120,9 +121,15 @@ def make_sharded_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
     dp_spec = dp if len(dp) > 1 else dp[0]
     tp = mesh.shape[tp_axis]
 
+    plan = None
+    if tcfg.plan_path is not None:
+        from repro.core.hw import CXL_POOL, INFINIBAND
+        from repro.tuner import load_plan
+        # fingerprint-checked: refuse a plan tuned for other hardware
+        plan = load_plan(tcfg.plan_path, pool=CXL_POOL, ib=INFINIBAND)
     comm = Communicator(backend=tcfg.backend,
                         slicing_factor=tcfg.slicing_factor,
-                        allreduce_mode=tcfg.allreduce_mode)
+                        allreduce_mode=tcfg.allreduce_mode, plan=plan)
     pc = ParallelContext(tp_axis=tp_axis if tp > 1 else None,
                          dp_axis=dp_spec, tp=tp, comm=comm)
 

@@ -1,0 +1,29 @@
+"""Autotuning plan subsystem (cost-model-driven backend selection).
+
+Offline, ``generate_plan`` sweeps every (primitive, message size, axis
+size, slicing factor, allreduce mode) cell through the pool simulator
+and the IB alpha-beta model and records the predicted-fastest choice.
+Online, ``Communicator(backend="auto")`` consults the persisted plan at
+trace time and the ledger audits every decision taken.
+
+Workflow::
+
+    python -m repro.launch.tune --out plan.json     # offline
+    python -m repro.launch.train --backend auto --plan plan.json
+"""
+from repro.tuner.costmodel import predict_time
+from repro.tuner.plan import (Choice, Plan, hardware_fingerprint,
+                              load_plan, save_plan, size_bucket)
+from repro.tuner.runtime import (activate_plan_file, clear_active_plan,
+                                 default_plan_path, ensure_default_plan,
+                                 get_active_plan, set_active_plan)
+from repro.tuner.sweep import (DEFAULT_GRID, SMOKE_GRID, TuneGrid,
+                               generate_plan)
+
+__all__ = [
+    "Choice", "Plan", "TuneGrid", "DEFAULT_GRID", "SMOKE_GRID",
+    "predict_time", "generate_plan", "hardware_fingerprint",
+    "size_bucket", "load_plan", "save_plan", "activate_plan_file",
+    "clear_active_plan", "default_plan_path", "ensure_default_plan",
+    "get_active_plan", "set_active_plan",
+]

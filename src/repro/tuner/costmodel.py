@@ -1,0 +1,60 @@
+"""Unified cost oracle for the tuner.
+
+One function predicts the completion time of any (backend, primitive,
+nranks, msg_bytes, knobs) point:
+
+* ``ring`` - the calibrated NCCL-over-InfiniBand alpha-beta model
+  (``core.ibmodel``); slicing factor and allreduce mode don't apply
+  (NCCL picks its own chunking).
+* ``cxl``  - the event-driven pool simulator (``core.simulator``) run on
+  the fully-overlapped schedule ("all" variant).  ``two_phase``
+  AllReduce is costed as its actual composition: reduce_scatter(S)
+  followed by all_gather(S/n), matching what ``mesh_collectives``
+  executes; ``faithful`` is the paper's single-phase schedule.
+
+Simulator runs are memoized - the sweep revisits (primitive, size,
+nranks) many times across slicing factors and the two-phase composition
+reuses the N->N runs.
+"""
+from __future__ import annotations
+
+import functools
+
+from repro.core import ibmodel, simulator
+from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
+                           InfiniBandConfig)
+
+
+@functools.lru_cache(maxsize=65536)
+def _sim_time(primitive: str, nranks: int, msg_bytes: int,
+              slicing_factor: int, pool: CXLPoolConfig) -> float:
+    return simulator.run_variant(
+        "all", primitive, nranks, msg_bytes,
+        slicing_factor=slicing_factor, pool=pool).total_time
+
+
+def predict_time(backend: str, primitive: str, nranks: int, msg_bytes: int,
+                 *, slicing_factor: int = 4,
+                 allreduce_mode: str = "two_phase",
+                 pool: CXLPoolConfig = CXL_POOL,
+                 ib: InfiniBandConfig = INFINIBAND) -> float:
+    """Predicted completion time (seconds) under the offline cost model."""
+    if nranks <= 1:
+        return 0.0
+    if backend == "ring":
+        return ibmodel.estimate(primitive, nranks, msg_bytes, ib).time
+    if backend == "cxl":
+        if primitive == "all_reduce" and allreduce_mode == "two_phase":
+            rs = _sim_time("reduce_scatter", nranks, msg_bytes,
+                           slicing_factor, pool)
+            ag = _sim_time("all_gather", nranks,
+                           max(1, msg_bytes // nranks),
+                           slicing_factor, pool)
+            return rs + ag
+        return _sim_time(primitive, nranks, msg_bytes, slicing_factor,
+                         pool)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def cache_clear() -> None:
+    _sim_time.cache_clear()

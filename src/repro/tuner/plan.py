@@ -1,0 +1,144 @@
+"""Autotuning plan: per-(primitive, size-bucket, nranks) backend choice.
+
+A ``Plan`` is the persisted product of an offline sweep through the two
+cost oracles (``core.simulator`` for the pool backend, ``core.ibmodel``
+for the NCCL-over-IB baseline).  Each entry maps
+
+    (primitive, floor(log2(msg_bytes)), nranks)
+        -> Choice(backend, slicing_factor, allreduce_mode, ...)
+
+and ``Communicator(backend="auto")`` consults it at trace time (shapes
+are static, so the lookup costs nothing at run time).  Plans are keyed
+by a fingerprint of the hardware model (``CXLPoolConfig`` +
+``InfiniBandConfig``): a plan tuned for one pool must not silently drive
+another.
+
+Lookup is log2-bucketed with nearest-bucket fallback: an unseen message
+size resolves to the closest tuned bucket (ties to the smaller), and an
+unseen rank count to the closest tuned nranks for that primitive.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Optional
+
+from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
+                           InfiniBandConfig)
+
+PLAN_VERSION = 1
+
+
+def hardware_fingerprint(pool: CXLPoolConfig = CXL_POOL,
+                         ib: InfiniBandConfig = INFINIBAND) -> str:
+    blob = json.dumps({"pool": dataclasses.asdict(pool),
+                       "ib": dataclasses.asdict(ib)}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def size_bucket(nbytes: int) -> int:
+    """floor(log2(nbytes)); bucket 0 holds 1-byte messages."""
+    n = int(nbytes)
+    if n < 1:
+        raise ValueError("message size must be >= 1 byte")
+    return n.bit_length() - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    """The knobs the tuner picked for one (primitive, bucket, nranks)."""
+
+    backend: str                       # 'ring' | 'cxl'
+    slicing_factor: int = 4
+    allreduce_mode: str = "two_phase"
+    predicted_time: float = 0.0        # cost-model time of this choice
+    baseline_time: float = 0.0         # best fixed-knob alternative
+
+
+PlanKey = tuple  # (primitive, bucket, nranks)
+
+
+@dataclasses.dataclass
+class Plan:
+    fingerprint: str
+    entries: dict = dataclasses.field(default_factory=dict)  # key -> Choice
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, primitive: str, msg_bytes: int, nranks: int,
+            choice: Choice) -> None:
+        self.entries[(primitive, size_bucket(msg_bytes), nranks)] = choice
+
+    def matches(self, pool: CXLPoolConfig = CXL_POOL,
+                ib: InfiniBandConfig = INFINIBAND) -> bool:
+        return self.fingerprint == hardware_fingerprint(pool, ib)
+
+    def lookup(self, primitive: str, msg_bytes: int,
+               nranks: int) -> Optional[Choice]:
+        """Nearest-bucket plan lookup (None if the primitive is untuned)."""
+        keys = [k for k in self.entries if k[0] == primitive]
+        if not keys:
+            return None
+        want_b = size_bucket(max(1, msg_bytes))
+        # Nearest tuned nranks first (ties to the smaller) ...
+        best_n = min({k[2] for k in keys},
+                     key=lambda n: (abs(n - nranks), n))
+        # ... then the nearest tuned bucket within that nranks.
+        best_b = min({k[1] for k in keys if k[2] == best_n},
+                     key=lambda b: (abs(b - want_b), b))
+        return self.entries[(primitive, best_b, best_n)]
+
+    # -- serialization ----------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "version": PLAN_VERSION,
+            "fingerprint": self.fingerprint,
+            "meta": self.meta,
+            "entries": [
+                {"primitive": k[0], "bucket": k[1], "nranks": k[2],
+                 **dataclasses.asdict(c)}
+                for k, c in sorted(self.entries.items())],
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "Plan":
+        if doc.get("version") != PLAN_VERSION:
+            raise ValueError(
+                f"unsupported plan version {doc.get('version')!r}")
+        plan = cls(fingerprint=doc["fingerprint"],
+                   meta=dict(doc.get("meta", {})))
+        for e in doc["entries"]:
+            key = (e["primitive"], int(e["bucket"]), int(e["nranks"]))
+            plan.entries[key] = Choice(
+                backend=e["backend"],
+                slicing_factor=int(e["slicing_factor"]),
+                allreduce_mode=e["allreduce_mode"],
+                predicted_time=float(e["predicted_time"]),
+                baseline_time=float(e["baseline_time"]))
+        return plan
+
+
+def save_plan(plan: Plan, path: str) -> None:
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(plan.to_json(), f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load_plan(path: str, *, pool: Optional[CXLPoolConfig] = None,
+              ib: Optional[InfiniBandConfig] = None) -> Plan:
+    """Load a plan; when ``pool``/``ib`` are given, refuse a plan tuned
+    for different hardware."""
+    with open(path) as f:
+        plan = Plan.from_json(json.load(f))
+    if pool is not None or ib is not None:
+        want = hardware_fingerprint(pool or CXL_POOL, ib or INFINIBAND)
+        if plan.fingerprint != want:
+            raise ValueError(
+                f"plan {path} was tuned for hardware {plan.fingerprint}, "
+                f"current config fingerprints to {want}")
+    return plan

@@ -1,0 +1,83 @@
+"""Process-wide plan registry + the on-disk plan cache.
+
+``Communicator(backend="auto")`` resolves its plan in this order:
+
+1. the ``plan`` explicitly attached to the Communicator;
+2. the process-wide active plan (``set_active_plan`` /
+   ``activate_plan_file``);
+3. the persisted default plan for the current hardware fingerprint
+   (``ensure_default_plan``), generated on first use with the smoke
+   grid and cached under ``$REPRO_PLAN_CACHE`` (default
+   ``~/.cache/repro/plans``) so later processes just load it.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
+                           InfiniBandConfig)
+from repro.tuner.plan import (Plan, hardware_fingerprint, load_plan,
+                              save_plan)
+from repro.tuner.sweep import SMOKE_GRID, TuneGrid, generate_plan
+
+_ACTIVE: list = [None]
+
+
+def set_active_plan(plan: Optional[Plan]) -> None:
+    _ACTIVE[0] = plan
+
+
+def get_active_plan() -> Optional[Plan]:
+    return _ACTIVE[0]
+
+
+def clear_active_plan() -> None:
+    _ACTIVE[0] = None
+
+
+def activate_plan_file(path: str, *,
+                       pool: Optional[CXLPoolConfig] = None,
+                       ib: Optional[InfiniBandConfig] = None) -> Plan:
+    plan = load_plan(path, pool=pool, ib=ib)
+    set_active_plan(plan)
+    return plan
+
+
+def plan_cache_dir() -> str:
+    env = os.environ.get("REPRO_PLAN_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "plans")
+
+
+def default_plan_path(pool: CXLPoolConfig = CXL_POOL,
+                      ib: InfiniBandConfig = INFINIBAND) -> str:
+    return os.path.join(plan_cache_dir(),
+                        f"plan_{hardware_fingerprint(pool, ib)}.json")
+
+
+def ensure_default_plan(pool: CXLPoolConfig = CXL_POOL,
+                        ib: InfiniBandConfig = INFINIBAND,
+                        grid: TuneGrid = SMOKE_GRID) -> Plan:
+    """Return the active plan, loading or generating+persisting the
+    fingerprint-keyed default when none is set."""
+    active = get_active_plan()
+    if active is not None:
+        return active
+    path = default_plan_path(pool, ib)
+    if os.path.exists(path):
+        try:
+            plan = load_plan(path, pool=pool, ib=ib)
+            set_active_plan(plan)
+            return plan
+        except (ValueError, OSError, KeyError):
+            pass  # stale/corrupt cache: regenerate below
+    plan = generate_plan(grid, pool=pool, ib=ib)
+    try:
+        save_plan(plan, path)
+    except OSError:
+        pass  # read-only cache dir: keep the in-memory plan
+    set_active_plan(plan)
+    return plan

@@ -1,0 +1,83 @@
+"""Offline tuning sweep: grid -> Plan.
+
+For every (primitive, msg_bytes, nranks) cell the sweep costs a fixed
+``ring`` candidate plus every (slicing_factor, allreduce_mode) ``cxl``
+candidate, and records the argmin as the plan entry.  The best
+*fixed-knob* alternative (ring, or cxl at the Communicator defaults) is
+stored alongside, so benchmarks can report regret: by construction the
+chosen time is never worse than that baseline as long as the grid
+contains the default slicing factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Callable, Optional
+
+from repro.core import mesh_collectives as mc
+from repro.core.hw import (CXL_POOL, INFINIBAND, MiB, CXLPoolConfig,
+                           InfiniBandConfig)
+from repro.core.schedule import PRIMITIVES
+from repro.tuner import costmodel
+from repro.tuner.plan import Choice, Plan, hardware_fingerprint
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneGrid:
+    primitives: tuple = PRIMITIVES
+    sizes: tuple = tuple(m * MiB for m in (1, 4, 16, 64, 256, 1024, 4096))
+    nranks: tuple = (2, 3, 4, 6, 8, 12)
+    slicing_factors: tuple = (1, 2, 4, 8, 16)
+    allreduce_modes: tuple = ("two_phase", "faithful")
+
+    @property
+    def cells(self) -> int:
+        return len(self.primitives) * len(self.sizes) * len(self.nranks)
+
+
+DEFAULT_GRID = TuneGrid()
+
+# Grid for the lazy ``ensure_default_plan`` path and CI smoke runs:
+# coarse knobs, same coverage shape, seconds not minutes.
+SMOKE_GRID = TuneGrid(sizes=tuple(m * MiB for m in (1, 16, 256)),
+                      nranks=(2, 3), slicing_factors=(1, 4))
+
+
+def _candidates(primitive: str, grid: TuneGrid):
+    yield ("ring", mc.DEFAULT_CHUNKS, "two_phase")
+    modes = grid.allreduce_modes if primitive == "all_reduce" \
+        else ("two_phase",)
+    for f, m in itertools.product(grid.slicing_factors, modes):
+        yield ("cxl", f, m)
+
+
+def generate_plan(grid: TuneGrid = DEFAULT_GRID, *,
+                  pool: CXLPoolConfig = CXL_POOL,
+                  ib: InfiniBandConfig = INFINIBAND,
+                  progress: Optional[Callable[[str], None]] = None) -> Plan:
+    plan = Plan(fingerprint=hardware_fingerprint(pool, ib),
+                meta={"grid": dataclasses.asdict(grid)})
+    for prim in grid.primitives:
+        for n in grid.nranks:
+            for size in grid.sizes:
+                best: Optional[Choice] = None
+                fixed_best = math.inf
+                for backend, factor, mode in _candidates(prim, grid):
+                    t = costmodel.predict_time(
+                        backend, prim, n, size, slicing_factor=factor,
+                        allreduce_mode=mode, pool=pool, ib=ib)
+                    if backend == "ring" or (
+                            factor == mc.DEFAULT_CHUNKS
+                            and mode == "two_phase"):
+                        fixed_best = min(fixed_best, t)
+                    if best is None or t < best.predicted_time:
+                        best = Choice(backend=backend,
+                                      slicing_factor=factor,
+                                      allreduce_mode=mode,
+                                      predicted_time=t)
+                best = dataclasses.replace(best, baseline_time=fixed_best)
+                plan.add(prim, size, n, best)
+            if progress:
+                progress(f"tuned {prim} nranks={n}")
+    return plan

@@ -1,0 +1,78 @@
+"""Tiny stand-in for the optional ``hypothesis`` dependency.
+
+The property tests only use ``@hp.settings``, ``@hp.given``,
+``hp.assume`` and ``st.integers``; when hypothesis is not installed the
+test modules fall back to this shim, which drives each property with the
+strategy bounds plus a deterministic pseudo-random sample.  Import it as
+both ``hp`` and ``st``::
+
+    try:
+        import hypothesis as hp
+        import hypothesis.strategies as st
+    except ImportError:
+        import _hypothesis_shim as hp
+        import _hypothesis_shim as st
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+DEFAULT_EXAMPLES = 20
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+class integers:
+    def __init__(self, min_value: int, max_value: int):
+        self.lo = min_value
+        self.hi = max_value
+
+    def sample(self, rng: random.Random) -> int:
+        return rng.randint(self.lo, self.hi)
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", DEFAULT_EXAMPLES)
+            rng = random.Random(fn.__qualname__)  # deterministic per test
+            examples = [tuple(s.lo for s in strategies),
+                        tuple(s.hi for s in strategies)]
+            while len(examples) < n + 2:
+                examples.append(tuple(s.sample(rng) for s in strategies))
+            ran = 0
+            for ex in examples:
+                try:
+                    fn(*args, *ex, **kwargs)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+            if not ran:     # mirror hypothesis's Unsatisfied error
+                raise RuntimeError(
+                    f"{fn.__qualname__}: assume() rejected every "
+                    f"generated example")
+
+        # pytest must see a zero-arg test, not the property's params
+        # (inspect.signature follows __wrapped__ and would report them
+        # as missing fixtures otherwise).
+        del wrapper.__wrapped__
+        wrapper._hypothesis_shim = True
+        return wrapper
+    return deco
+
+
+def settings(deadline=None, max_examples: int = DEFAULT_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -1,6 +1,10 @@
 """Slicing-factor chunking + doorbell state machine."""
-import hypothesis as hp
-import hypothesis.strategies as st
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ImportError:              # optional dep: use the local shim
+    import _hypothesis_shim as hp
+    import _hypothesis_shim as st
 import pytest
 
 from repro.core import chunking

@@ -1,6 +1,10 @@
 """Eq. 1-4 placement-math properties (unit + hypothesis)."""
-import hypothesis as hp
-import hypothesis.strategies as st
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ImportError:              # optional dep: use the local shim
+    import _hypothesis_shim as hp
+    import _hypothesis_shim as st
 import pytest
 
 from repro.core.interleave import (PoolLayout, publish_order,

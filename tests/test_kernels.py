@@ -1,7 +1,11 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype
 sweeps + hypothesis properties."""
-import hypothesis as hp
-import hypothesis.strategies as st
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ImportError:              # optional dep: use the local shim
+    import _hypothesis_shim as hp
+    import _hypothesis_shim as st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -2,8 +2,12 @@
 sweeps, slicing factors, plus hypothesis property tests.  Also checks the
 structural invariants (no overlapping pool writes - enforced inside
 execute; doorbell deadlock freedom)."""
-import hypothesis as hp
-import hypothesis.strategies as st
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ImportError:              # optional dep: use the local shim
+    import _hypothesis_shim as hp
+    import _hypothesis_shim as st
 import numpy as np
 import pytest
 

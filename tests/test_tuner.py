@@ -1,0 +1,190 @@
+"""Autotuning plan subsystem: serialization round-trip, bucketing +
+fallback lookup, fingerprint keying, the never-slower guarantee, and
+Communicator(backend='auto') dispatch + ledger audit."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import tuner
+from repro.core import ledger
+from repro.core.api import Communicator, make_communicator
+from repro.core.hw import CXL_POOL, INFINIBAND, MiB
+from repro.tuner import costmodel
+
+TINY = tuner.TuneGrid(
+    primitives=("all_gather", "all_reduce", "broadcast"),
+    sizes=(1 * MiB, 16 * MiB), nranks=(2, 3), slicing_factors=(1, 4))
+
+
+@pytest.fixture(scope="module")
+def tiny_plan():
+    return tuner.generate_plan(TINY)
+
+
+# -- plan mechanics -------------------------------------------------------
+
+def test_size_bucket():
+    assert tuner.size_bucket(1) == 0
+    assert tuner.size_bucket(1024) == 10
+    assert tuner.size_bucket(1025) == 10
+    assert tuner.size_bucket(2048) == 11
+    with pytest.raises(ValueError):
+        tuner.size_bucket(0)
+
+
+def test_roundtrip(tiny_plan, tmp_path):
+    path = str(tmp_path / "plan.json")
+    tuner.save_plan(tiny_plan, path)
+    loaded = tuner.load_plan(path)
+    assert loaded.fingerprint == tiny_plan.fingerprint
+    assert loaded.entries == tiny_plan.entries
+    assert loaded.meta["grid"]["nranks"] == [2, 3]
+
+
+def test_fingerprint_tracks_hardware(tiny_plan, tmp_path):
+    pool2 = dataclasses.replace(CXL_POOL, device_bw=10e9)
+    assert tuner.hardware_fingerprint(pool2) != \
+        tuner.hardware_fingerprint(CXL_POOL)
+    path = str(tmp_path / "plan.json")
+    tuner.save_plan(tiny_plan, path)
+    # verified load: matching hw ok, mismatched hw refused
+    tuner.load_plan(path, pool=CXL_POOL, ib=INFINIBAND)
+    with pytest.raises(ValueError):
+        tuner.load_plan(path, pool=pool2)
+
+
+def test_rejects_unknown_version(tiny_plan, tmp_path):
+    path = str(tmp_path / "plan.json")
+    tuner.save_plan(tiny_plan, path)
+    doc = json.load(open(path))
+    doc["version"] = 999
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ValueError):
+        tuner.load_plan(path)
+
+
+def test_lookup_exact_and_fallback(tiny_plan):
+    # exact cell
+    ch = tiny_plan.lookup("all_gather", 16 * MiB, 3)
+    assert ch is tiny_plan.entries[("all_gather",
+                                    tuner.size_bucket(16 * MiB), 3)]
+    # size between buckets 20 (1 MiB) and 24 (16 MiB): 5 MiB -> bucket 22,
+    # equidistant, ties to the smaller bucket
+    ch = tiny_plan.lookup("all_gather", 5 * MiB, 3)
+    assert ch is tiny_plan.entries[("all_gather",
+                                    tuner.size_bucket(1 * MiB), 3)]
+    # unseen nranks -> nearest tuned nranks (8 -> 3)
+    ch = tiny_plan.lookup("all_gather", 1 * MiB, 8)
+    assert ch is tiny_plan.entries[("all_gather",
+                                    tuner.size_bucket(1 * MiB), 3)]
+    # untuned primitive -> None
+    assert tiny_plan.lookup("scatter", 1 * MiB, 3) is None
+
+
+def test_auto_never_slower_than_fixed(tiny_plan):
+    """The tentpole guarantee: every plan entry's predicted time is <=
+    both fixed-ring and fixed-cxl (default knobs) for its cell."""
+    for (prim, bucket, n), ch in tiny_plan.entries.items():
+        size = 1 << bucket
+        t_ring = tuner.predict_time("ring", prim, n, size)
+        t_cxl = tuner.predict_time("cxl", prim, n, size,
+                                   slicing_factor=4,
+                                   allreduce_mode="two_phase")
+        best_fixed = min(t_ring, t_cxl)
+        assert ch.predicted_time <= best_fixed * (1 + 1e-9), \
+            (prim, bucket, n, ch)
+        assert ch.baseline_time == pytest.approx(best_fixed, rel=1e-12)
+
+
+def test_costmodel_two_phase_is_composition():
+    t2 = tuner.predict_time("cxl", "all_reduce", 3, 4 * MiB,
+                            slicing_factor=4,
+                            allreduce_mode="two_phase")
+    rs = costmodel._sim_time("reduce_scatter", 3, 4 * MiB, 4, CXL_POOL)
+    ag = costmodel._sim_time("all_gather", 3, (4 * MiB) // 3, 4, CXL_POOL)
+    assert t2 == pytest.approx(rs + ag)
+    assert tuner.predict_time("ring", "all_gather", 1, MiB) == 0.0
+    with pytest.raises(ValueError):
+        tuner.predict_time("nccl", "all_gather", 3, MiB)
+
+
+# -- runtime registry + persisted default plan ----------------------------
+
+def test_runtime_cache_persists(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path))
+    tuner.clear_active_plan()
+    try:
+        plan = tuner.ensure_default_plan(grid=TINY)
+        path = tuner.default_plan_path()
+        assert os.path.exists(path)
+        # a fresh process state must load the persisted plan, not retune
+        tuner.clear_active_plan()
+        again = tuner.ensure_default_plan(grid=TINY)
+        assert again.entries == plan.entries
+        assert tuner.get_active_plan() is again
+    finally:
+        tuner.clear_active_plan()
+
+
+# -- Communicator(backend='auto') -----------------------------------------
+
+def test_communicator_slicing_factor_validation():
+    for bad in (0, -3, 2.5, True):
+        with pytest.raises(ValueError):
+            Communicator(slicing_factor=bad)
+    assert Communicator(slicing_factor=1).slicing_factor == 1
+
+
+def test_communicator_accepts_auto(tiny_plan):
+    c = make_communicator("auto", plan=tiny_plan)
+    assert c.backend == "auto" and c.plan is tiny_plan
+    # plan is advisory state: excluded from equality
+    assert c == make_communicator("auto")
+
+
+def test_auto_choice_follows_plan_and_audits(tiny_plan):
+    comm = Communicator(backend="auto", plan=tiny_plan)
+    ledger.reset()
+    be, factor, mode = comm._choice("all_gather", 16 * MiB, 3)
+    want = tiny_plan.lookup("all_gather", 16 * MiB, 3)
+    assert (be, factor, mode) == (want.backend, want.slicing_factor,
+                                  want.allreduce_mode)
+    # untuned primitive falls back to ring with the communicator knobs
+    be2, _, _ = comm._choice("scatter", 1 * MiB, 3)
+    assert be2 == "ring"
+    audit = ledger.snapshot()["auto_choices"]
+    assert [a["primitive"] for a in audit] == ["all_gather", "scatter"]
+    assert audit[0]["backend"] == want.backend
+    assert audit[0]["nranks"] == 3
+    ledger.reset()
+    assert ledger.snapshot()["auto_choices"] == []
+
+
+def test_auto_fixed_backends_do_not_audit():
+    ledger.reset()
+    comm = Communicator(backend="cxl", slicing_factor=8)
+    assert comm._choice("all_gather", MiB, 4) == (
+        "cxl", 8, "two_phase")
+    assert ledger.snapshot()["auto_choices"] == []
+
+
+def test_auto_traces_through_shard_map(tiny_plan):
+    """End-to-end: an auto Communicator inside jit/shard_map resolves its
+    plan at trace time and still computes the right collective."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    comm = Communicator(backend="auto", plan=tiny_plan)
+    mesh = jax.make_mesh((1,), ("x",))
+    ledger.reset()
+    f = jax.jit(jax.shard_map(
+        lambda a: comm.all_reduce(comm.all_gather(a, "x"), "x"),
+        mesh=mesh, in_specs=P("x"), out_specs=P(), check_vma=False))
+    x = np.arange(32, dtype=np.float32).reshape(8, 4)
+    np.testing.assert_allclose(np.asarray(f(x)), x, rtol=1e-6)
+    audit = ledger.snapshot()["auto_choices"]
+    assert [a["primitive"] for a in audit] == ["all_gather",
+                                               "all_reduce"]
