@@ -1,0 +1,337 @@
+"""Communication/compute overlap benchmark (core.overlap).
+
+Models one FSDP training step per zoo config under the calibrated cost
+oracles and compares two schedules built from the *same* leaf/spec
+enumeration the trainer uses (``model.abstract_params`` +
+``sharding.param_specs`` + ``core.overlap.assign_buckets``):
+
+* **per-leaf baseline** - one collective per parameter leaf (forward
+  AllGather, remat re-AllGather, grad ReduceScatter per FSDP leaf; one
+  AllReduce per replicated leaf), every collective serialized against
+  the compute that consumes it - the pre-overlap hot path.
+* **bucketed + prefetch** - leaves fused into size-capped flat buckets
+  (one collective per bucket) and layer ``l+1``'s gathers priced
+  against the roofline residency of layer ``l``'s compute
+  (``exposed = max(0, comm - overlappable)``), matching the
+  double-buffered carry in ``model._run_groups``.
+
+Also audits an *overlap-aware* autotuning plan on the Fig. 9 sweep:
+with every candidate (fixed baselines included) priced by exposed time,
+``auto`` must never be slower than the best fixed choice
+(``overlap_autotune_max_regret <= 1``), and wires a traced (1,1)-mesh
+train step through the real ledger to show the per-step collective
+*call* count drop and the exposed-vs-hidden byte split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import tuner
+from repro.configs import get_config
+from repro.core import ledger, overlap
+from repro.core.hw import MiB
+from repro.core.schedule import PRIMITIVES
+from repro.models import blocks, model, sharding
+
+NRANKS = 8                 # FSDP ranks (every zoo dim divides 8)
+# Comm/compute balance point: small local batch keeps FSDP traffic
+# comparable to the matmul time (llm_case_study.py documents the same
+# H100 constants for the Sec. 5.5 reproduction).
+TOKENS_PER_RANK = 2 * 4096
+H100_FLOPS = 990e12
+MFU = 0.40
+BYTES_PER_PARAM = 2        # bf16 shards on the wire
+GRAD_BYTES = 4             # fp32 grad accumulators (train_loop zeros_g)
+
+ZOO = ("llama3-8b", "yi-6b", "phi3-medium-14b", "deepseek-coder-33b",
+       "llama3.2-1b")
+SMOKE_ZOO = ("llama3-8b", "yi-6b", "llama3.2-1b")
+BUCKET_SWEEP_MB = (1, 4, 25, 100)
+
+FIG9_SIZES = [1 * MiB, 4 * MiB, 16 * MiB, 64 * MiB, 256 * MiB,
+              1024 * MiB, 4096 * MiB]
+FIG9_SMOKE_SIZES = [1 * MiB, 16 * MiB, 256 * MiB]
+OVERLAP_WINDOW_S = 2e-3    # per-collective compute window for the audit
+
+
+# --------------------------------------------------------------------- #
+# collective pricing (best fixed backend per call, like the tuner sees)
+# --------------------------------------------------------------------- #
+
+def _price(prim: str, full_bytes: int) -> float:
+    msg = max(1, full_bytes // NRANKS) if prim == "all_gather" \
+        else max(1, full_bytes)
+    t_ring = tuner.predict_time("ring", prim, NRANKS, msg)
+    t_cxl = tuner.predict_time("cxl", prim, NRANKS, msg,
+                               slicing_factor=4,
+                               allreduce_mode="two_phase")
+    return min(t_ring, t_cxl)
+
+
+def _leaf_entries(tree, specs, axis):
+    """(fsdp_entries, sync_entries): (index, shape, dtype, group_key)
+    rows ready for overlap.assign_buckets, plus per-leaf byte lists."""
+    leaves, treedef = jax.tree.flatten(tree)
+    spec_leaves = treedef.flatten_up_to(specs)
+    fsdp, syncs = [], []
+    for i, (x, spec) in enumerate(zip(leaves, spec_leaves)):
+        if overlap._axis_dim(spec, axis) is not None:
+            fsdp.append((i, tuple(x.shape), x.dtype, ()))
+        elif axis not in overlap._spec_axes(spec):
+            syncs.append((i, tuple(x.shape), x.dtype, ()))
+    return fsdp, syncs
+
+
+def _entry_bytes(e, per_param: int) -> int:
+    size = 1
+    for d in e[1]:
+        size *= d
+    return size * per_param
+
+
+def _bucket_sizes(entries, cap_bytes, per_param: int) -> list:
+    """Fused-buffer byte sizes under a cap (None -> fully fused,
+    cap<=0 -> per-leaf)."""
+    out = []
+    for b in overlap.assign_buckets(entries, cap_bytes):
+        out.append(sum(_entry_bytes((s.index, s.shape, None, None),
+                                    per_param)
+                       for s in b.slots))
+    return out
+
+
+def _row_structure(cfg):
+    """Per scan-group: (count, fsdp gather entries, row params, sync
+    entries) from the same abstract tree + specs the trainer builds."""
+    sharding.set_mesh_sizes({"data": NRANKS, "model": 1})
+    abstract = model.abstract_params(cfg, tp=1)
+    pspecs = sharding.param_specs(abstract, cfg, model_axis="model",
+                                  dp_axis="data", fsdp=True)
+    rspecs = sharding.row_specs(pspecs)
+    groups = blocks.scan_groups(cfg)
+    rows = []
+    for gi, g in enumerate(groups):
+        key = "shared_a" if g.shared else f"g{gi}"
+        row = abstract[key] if g.shared else jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            abstract[key])
+        fsdp, _ = _leaf_entries(row, rspecs[key], "data")
+        row_params = sum(int(np.prod(x.shape))
+                         for x in jax.tree.leaves(row))
+        rows.append((g.count, g.shared, fsdp, row_params))
+    fsdp_embed, _ = _leaf_entries(abstract["embed"], pspecs["embed"],
+                                  "data")
+    _, sync_entries = _leaf_entries(abstract, pspecs, "data")
+    return rows, fsdp_embed, sync_entries
+
+
+def _step_model(cfg, gather_cap, sync_cap, prefetch: bool) -> dict:
+    """Modeled step time + per-step collective count for one schedule.
+
+    ``gather_cap``/``sync_cap`` follow ``overlap.assign_buckets``:
+    None = fully fused (row FlatParameter / one sync buffer), positive =
+    NCCL-style size cap, <= 0 = per-leaf."""
+    rows, fsdp_embed, sync_entries = _row_structure(cfg)
+    compute_fn = lambda flops: tuner.roofline_compute_time(
+        flops, peak_flops=H100_FLOPS * MFU)
+
+    comm = exposed = 0.0
+    count = 0
+    total_params = 0
+    for n_layers, shared, fsdp, row_params in rows:
+        total_params += row_params * (1 if shared else n_layers)
+        sizes = _bucket_sizes(fsdp, gather_cap, BYTES_PER_PARAM)
+        ag = sum(_price("all_gather", s) for s in sizes)
+        rs = sum(_price("reduce_scatter", s) for s in sizes)
+        # fwd AllGather + remat re-AllGather + grad ReduceScatter per
+        # layer; a shared (single-param-set) group under prefetch hoists
+        # to ONE gather whose AD transpose is one fused ReduceScatter.
+        hoisted = shared and prefetch
+        n_ag = 1 if hoisted else 2 * n_layers
+        n_rs = 1 if hoisted else n_layers
+        layer_comm = ag * n_ag + rs * n_rs
+        comm += layer_comm
+        count += (n_ag + n_rs) * len(sizes)
+        # fwd window = 2*N*t flops, bwd window = 4*N*t (remat replay
+        # included in compute either way); prefetch hides each gather /
+        # scatter behind the roofline residency of the adjacent layer.
+        w_fwd = compute_fn(2.0 * row_params * TOKENS_PER_RANK)
+        w_bwd = compute_fn(4.0 * row_params * TOKENS_PER_RANK)
+        if prefetch:
+            if hoisted:
+                exposed += max(0.0, ag - w_fwd) + max(0.0, rs - w_bwd)
+            else:
+                # n_layers fwd gathers total: the prologue (row 0) is
+                # fully exposed, the n_layers-1 prefetched ones hide
+                # behind the previous layer's fwd compute; remat
+                # re-gathers and grad scatters hide behind bwd compute.
+                exposed += ag \
+                    + (n_layers - 1) * max(0.0, ag - w_fwd) \
+                    + n_layers * (max(0.0, ag - w_bwd)
+                                  + max(0.0, rs - w_bwd))
+        else:
+            exposed += layer_comm
+
+    emb_sizes = _bucket_sizes(fsdp_embed, gather_cap, BYTES_PER_PARAM)
+    emb = sum(_price("all_gather", s) + _price("reduce_scatter", s)
+              for s in emb_sizes)
+    comm += emb
+    exposed += emb            # gathered once up front: exposed prologue
+    count += 2 * len(emb_sizes)
+
+    sync_sizes = _bucket_sizes(sync_entries, sync_cap, GRAD_BYTES)
+    sync = sum(_price("all_reduce", s) for s in sync_sizes)
+    comm += sync
+    exposed += sync           # step-tail sync: conservatively exposed
+    count += len(sync_sizes)
+
+    compute = compute_fn(6.0 * total_params * TOKENS_PER_RANK)
+    step = compute + (exposed if prefetch else comm)
+    return {"step": step, "comm": comm, "exposed": exposed,
+            "compute": compute, "count": count,
+            "params": total_params}
+
+
+# --------------------------------------------------------------------- #
+# traced ledger: the real train step on a (1,1) mesh
+# --------------------------------------------------------------------- #
+
+def _traced_calls(arch: str, bucket_mb: float, prefetch: int) -> dict:
+    """Lower (trace only) the real sharded train step of the smoke
+    config and snapshot the trace-time ledger."""
+    from repro.optim import AdamWState
+    from repro.training.train_loop import (TrainConfig,
+                                           make_sharded_train_step)
+    cfg = get_config(arch, smoke=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tcfg = TrainConfig(warmup=0, clip_norm=None, remat=False,
+                       bucket_mb=bucket_mb, prefetch=prefetch)
+    ledger.reset()
+    step, pspecs, bspecs, pc = make_sharded_train_step(cfg, tcfg, mesh)
+    B, L = 2, 16
+    sds = lambda s, d: jax.ShapeDtypeStruct(s, d)
+    abstract = model.abstract_params(cfg, tp=1)
+    opt = AdamWState(
+        step=sds((), jnp.int32),
+        mu=jax.tree.map(lambda x: sds(x.shape, jnp.float32), abstract),
+        nu=jax.tree.map(lambda x: sds(x.shape, jnp.float32), abstract))
+    batch = {"tokens": sds((B, L), jnp.int32),
+             "labels": sds((B, L), jnp.int32)}
+    step.lower(abstract, opt, batch)
+    snap = ledger.snapshot()
+    ledger.reset()
+    return snap
+
+
+# --------------------------------------------------------------------- #
+# overlap-aware autotuning audit (Fig. 9 sweep)
+# --------------------------------------------------------------------- #
+
+def _overlap_regret(emit, smoke: bool) -> None:
+    sizes = FIG9_SMOKE_SIZES if smoke else FIG9_SIZES
+    nranks = (3,) if smoke else (3, 6, 12)
+    factors = (1, 4) if smoke else (1, 2, 4, 8, 16)
+    grid = tuner.TuneGrid(sizes=tuple(sizes), nranks=nranks,
+                          slicing_factors=factors)
+    plan = tuner.generate_plan(grid, overlap_compute=OVERLAP_WINDOW_S)
+    max_regret = 0.0
+    hidden_cells = 0
+    for prim in PRIMITIVES:
+        for n in nranks:
+            for size in sizes:
+                ch = plan.lookup(prim, size, n)
+                assert ch.overlap, "overlap-aware plan must mark cells"
+                t_ring = tuner.predict_exposed_time(
+                    "ring", prim, n, size,
+                    overlappable_compute=OVERLAP_WINDOW_S)
+                t_cxl = tuner.predict_exposed_time(
+                    "cxl", prim, n, size,
+                    overlappable_compute=OVERLAP_WINDOW_S,
+                    slicing_factor=4, allreduce_mode="two_phase")
+                best_fixed = min(t_ring, t_cxl)
+                if ch.predicted_time == 0.0:
+                    hidden_cells += 1
+                if best_fixed > 0:
+                    max_regret = max(max_regret,
+                                     ch.predicted_time / best_fixed)
+                else:
+                    assert ch.predicted_time == 0.0, (prim, size, n)
+    total = len(PRIMITIVES) * len(nranks) * len(sizes)
+    emit("overlap_autotune_max_regret", max_regret,
+         "auto exposed vs best fixed exposed; must be <= 1")
+    emit("overlap_autotune_fully_hidden_fraction", hidden_cells / total,
+         f"cells fully hidden behind {OVERLAP_WINDOW_S * 1e3:.0f}ms "
+         "compute")
+    assert max_regret <= 1.0 + 1e-9, (
+        f"overlap-aware auto slower than a fixed backend: {max_regret}")
+
+
+# --------------------------------------------------------------------- #
+# entry point
+# --------------------------------------------------------------------- #
+
+def run(emit, smoke: bool = False) -> None:
+    zoo = SMOKE_ZOO if smoke else ZOO
+    sync_cap = overlap.DEFAULT_BUCKET_BYTES
+
+    wins = 0
+    for arch in zoo:
+        cfg = get_config(arch)
+        base = _step_model(cfg, gather_cap=0, sync_cap=0,
+                           prefetch=False)
+        fused = _step_model(cfg, gather_cap=None, sync_cap=sync_cap,
+                            prefetch=True)
+        speedup = base["step"] / fused["step"]
+        count_ratio = base["count"] / fused["count"]
+        wins += speedup >= 1.2
+        emit(f"overlap_{arch}_step_speedup", speedup,
+             "bucketed+prefetch vs per-leaf serialized")
+        emit(f"overlap_{arch}_collective_count_ratio", count_ratio,
+             f"per-leaf {base['count']} -> bucketed {fused['count']} "
+             "per step")
+        emit(f"overlap_{arch}_exposed_comm_frac",
+             fused["exposed"] / fused["comm"] if fused["comm"] else 0.0,
+             "fraction of comm time left exposed after prefetch")
+    emit("overlap_zoo_wins_ge_1p2x", wins,
+         f"configs with >= 1.2x modeled step speedup (of {len(zoo)})")
+    assert wins >= 3, (
+        f"bucketed+prefetch must dominate >= 1.2x on >= 3 zoo configs, "
+        f"got {wins}")
+
+    # llama3-8b-class collective-count criterion (>= 5x drop)
+    base = _step_model(get_config("llama3-8b"), gather_cap=0,
+                       sync_cap=0, prefetch=False)
+    fused = _step_model(get_config("llama3-8b"), gather_cap=None,
+                        sync_cap=sync_cap, prefetch=True)
+    ratio = base["count"] / fused["count"]
+    emit("overlap_llama3_8b_count_drop", ratio,
+         "modeled per-step collectives, per-leaf / bucketed")
+    assert ratio >= 5.0, f"collective count must drop >= 5x: {ratio}"
+
+    # bucket-size sweep (EXPERIMENTS.md table): gather-bucket cap from
+    # NCCL-small up to row-fused (None)
+    for mb in BUCKET_SWEEP_MB:
+        r = _step_model(get_config("llama3-8b"), gather_cap=mb * MiB,
+                        sync_cap=sync_cap, prefetch=True)
+        emit(f"overlap_llama3_8b_bucket{mb}mb_speedup",
+             base["step"] / r["step"],
+             f"{r['count']} collectives/step at {mb} MiB buckets")
+    emit("overlap_llama3_8b_bucket_row_speedup",
+         base["step"] / fused["step"],
+         f"{fused['count']} collectives/step, row-fused buckets")
+
+    # real traced step: ledger call counts + exposed/hidden byte split
+    per_leaf = _traced_calls("llama3-8b", bucket_mb=0.0, prefetch=0)
+    fused_tr = _traced_calls("llama3-8b", bucket_mb=25.0, prefetch=1)
+    emit("overlap_traced_calls_per_leaf",
+         per_leaf["total_collective_calls"],
+         "ledger collective launches/step, smoke cfg, per-leaf")
+    emit("overlap_traced_calls_bucketed",
+         fused_tr["total_collective_calls"],
+         "ledger collective launches/step, smoke cfg, bucketed+prefetch")
+    assert fused_tr["total_collective_calls"] < \
+        per_leaf["total_collective_calls"]
+
+    _overlap_regret(emit, smoke)

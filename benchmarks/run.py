@@ -7,18 +7,23 @@ Prints ``name,value,notes`` CSV.  Modules:
   fig11    - slicing-factor sensitivity (Fig. 11)
   llm      - FSDP Llama-3-8B case study (Sec. 5.5)
   autotune - plan-driven backend='auto' vs fixed backends
+  overlap  - bucketed+prefetched FSDP step vs per-leaf serialized
 
-``--smoke`` runs the fast CI path: coarse-grid plan generation +
-the autotune audit (exercises the whole tuner stack in seconds).
+``--smoke`` runs the fast CI path: coarse-grid plan generation + the
+autotune and overlap audits (exercises the whole tuner + overlap stack
+in seconds).  ``--json PATH`` additionally writes every emitted record
+as JSON so CI can track the perf trajectory per-PR as an artifact.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import time
 
 from benchmarks import (autotune, fig3_characterization, fig9_collectives,
-                        fig10_scalability, fig11_chunks, llm_case_study)
+                        fig10_scalability, fig11_chunks, llm_case_study,
+                        overlap)
 
 MODULES = [
     ("fig3", fig3_characterization),
@@ -27,9 +32,10 @@ MODULES = [
     ("fig11", fig11_chunks),
     ("llm", llm_case_study),
     ("autotune", autotune),
+    ("overlap", overlap),
 ]
 
-SMOKE_MODULES = ("fig3", "autotune")
+SMOKE_MODULES = ("fig3", "autotune", "overlap")
 
 
 def main() -> None:
@@ -38,13 +44,17 @@ def main() -> None:
                     help="run a single module (default: all)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI path: coarse grids, subset of modules")
+    ap.add_argument("--json", default=None,
+                    help="also write emitted records to this JSON file")
     args = ap.parse_args()
 
     print("name,value,notes")
+    records = []
 
     def emit(name, value, notes=""):
         v = f"{value:.4f}" if isinstance(value, float) else str(value)
         print(f"{name},{v},{notes}")
+        records.append({"name": name, "value": value, "notes": notes})
 
     for key, mod in MODULES:
         if args.module and key != args.module:
@@ -58,6 +68,11 @@ def main() -> None:
             kwargs["smoke"] = True
         mod.run(emit, **kwargs)
         emit(f"{key}_wall_s", time.time() - t0, "benchmark wall time")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": bool(args.smoke), "records": records},
+                      f, indent=1)
 
 
 if __name__ == "__main__":

@@ -70,26 +70,31 @@ class Communicator:
     # -- plan resolution --------------------------------------------------
 
     def _choice(self, primitive: str, msg_bytes: int,
-                n: int) -> tuple[str, int, str]:
-        """Resolve (backend, slicing_factor, allreduce_mode) for one
-        collective call.  Static under ``jit`` (sizes and axis sizes are
-        trace-time constants), so this costs nothing at run time."""
+                n: int) -> tuple[str, int, str, bool]:
+        """Resolve (backend, slicing_factor, allreduce_mode, overlap) for
+        one collective call.  Static under ``jit`` (sizes and axis sizes
+        are trace-time constants), so this costs nothing at run time.
+        ``overlap`` is True when an overlap-aware plan tuned this cell
+        against the compute it expects to hide behind; the ledger then
+        books the wire bytes as hidden rather than exposed."""
         if self.backend != "auto":
-            return self.backend, self.slicing_factor, self.allreduce_mode
+            return (self.backend, self.slicing_factor,
+                    self.allreduce_mode, False)
         plan = self.plan
         if plan is None:
             from repro.tuner import runtime as tuner_runtime
             plan = tuner_runtime.ensure_default_plan()
         ch = plan.lookup(primitive, msg_bytes, n)
         if ch is None:     # primitive absent from the plan: ring baseline
-            backend, factor, mode = ("ring", self.slicing_factor,
-                                     self.allreduce_mode)
+            backend, factor, mode, overlap = (
+                "ring", self.slicing_factor, self.allreduce_mode, False)
         else:
-            backend, factor, mode = (ch.backend, ch.slicing_factor,
-                                     ch.allreduce_mode)
+            backend, factor, mode, overlap = (
+                ch.backend, ch.slicing_factor, ch.allreduce_mode,
+                ch.overlap)
         ledger.record_choice(primitive, msg_bytes, n, backend, factor,
-                             mode)
-        return backend, factor, mode
+                             mode, overlap=overlap)
+        return backend, factor, mode, overlap
 
     # -- N->N primitives (the FSDP / TP / MoE hot path) ------------------
 
@@ -106,10 +111,11 @@ class Communicator:
         out = x
         for ax in _axes(axis):  # innermost (pool-local) axis first
             n = lax.axis_size(ax)
-            backend, factor, mode = self._choice("all_reduce", s, n)
+            backend, factor, mode, ov = self._choice("all_reduce", s, n)
             wire = s * (n - 1) if mode == "faithful" and \
                 backend == "cxl" else 2 * s * (n - 1) / n
-            ledger.record("all_reduce", wire)
+            ledger.record("all_reduce", wire,
+                          hidden=True if ov else None)
             if backend == "ring":
                 out = lax.psum(out, ax)
             else:
@@ -126,8 +132,9 @@ class Communicator:
         for ax in reversed(axes):
             n = lax.axis_size(ax)
             s = ledger.nbytes(out)
-            backend, factor, _ = self._choice("all_gather", s, n)
-            ledger.record("all_gather", s * (n - 1))
+            backend, factor, _, ov = self._choice("all_gather", s, n)
+            ledger.record("all_gather", s * (n - 1),
+                          hidden=True if ov else None)
             if backend == "ring":
                 out = lax.all_gather(out, ax, tiled=True)
             else:
@@ -142,8 +149,9 @@ class Communicator:
         for ax in axes:  # outer axis first: inverse of gather
             n = lax.axis_size(ax)
             s = ledger.nbytes(out)
-            backend, factor, _ = self._choice("reduce_scatter", s, n)
-            ledger.record("reduce_scatter", s * (n - 1) / n)
+            backend, factor, _, ov = self._choice("reduce_scatter", s, n)
+            ledger.record("reduce_scatter", s * (n - 1) / n,
+                          hidden=True if ov else None)
             if backend == "ring":
                 out = lax.psum_scatter(out, ax, scatter_dimension=0,
                                        tiled=True)
@@ -158,8 +166,9 @@ class Communicator:
         ax = axes[0]
         n_ = lax.axis_size(ax)
         s = ledger.nbytes(x)
-        backend, factor, _ = self._choice("all_to_all", s, n_)
-        ledger.record("all_to_all", s * (n_ - 1) / n_)
+        backend, factor, _, ov = self._choice("all_to_all", s, n_)
+        ledger.record("all_to_all", s * (n_ - 1) / n_,
+                      hidden=True if ov else None)
         if backend == "ring":
             n = n_
             if x.shape[0] % n:
@@ -179,9 +188,10 @@ class Communicator:
             raise NotImplementedError("broadcast is single-axis")
         ax = axes[0]
         n_ = lax.axis_size(ax)
-        backend, factor, _ = self._choice("broadcast", ledger.nbytes(x),
-                                          n_)
-        ledger.record("broadcast", ledger.nbytes(x))
+        backend, factor, _, ov = self._choice("broadcast",
+                                              ledger.nbytes(x), n_)
+        ledger.record("broadcast", ledger.nbytes(x),
+                      hidden=True if ov else None)
         if backend == "ring":
             idx = lax.axis_index(ax)
             masked = jnp.where(idx == root, x, jnp.zeros_like(x))
@@ -196,8 +206,9 @@ class Communicator:
         ax = axes[0]
         n_ = lax.axis_size(ax)
         s = ledger.nbytes(x)
-        backend, factor, _ = self._choice("reduce", s, n_)
-        ledger.record("reduce", 2 * s * (n_ - 1) / n_)
+        backend, factor, _, ov = self._choice("reduce", s, n_)
+        ledger.record("reduce", 2 * s * (n_ - 1) / n_,
+                      hidden=True if ov else None)
         if backend == "ring":
             idx = lax.axis_index(ax)
             total = lax.psum(x, ax)
@@ -212,8 +223,9 @@ class Communicator:
         ax = axes[0]
         n_ = lax.axis_size(ax)
         s = ledger.nbytes(x)
-        backend, factor, _ = self._choice("gather", s, n_)
-        ledger.record("gather", s * (n_ - 1))
+        backend, factor, _, ov = self._choice("gather", s, n_)
+        ledger.record("gather", s * (n_ - 1),
+                      hidden=True if ov else None)
         if backend == "ring":
             idx = lax.axis_index(ax)
             full = lax.all_gather(x, ax, tiled=True)
@@ -227,7 +239,11 @@ class Communicator:
             raise NotImplementedError("scatter is single-axis")
         ax = axes[0]
         n_ = lax.axis_size(ax)
-        backend, factor, _ = self._choice("scatter", ledger.nbytes(x), n_)
+        s = ledger.nbytes(x)
+        backend, factor, _, ov = self._choice("scatter", s, n_)
+        # root pushes every segment but its own: s*(n-1)/n wire bytes
+        ledger.record("scatter", s * (n_ - 1) / n_,
+                      hidden=True if ov else None)
         if backend == "ring":
             n = n_
             idx = lax.axis_index(ax)

@@ -15,6 +15,15 @@ local payload s bytes):
     all_reduce      2 * s * (n-1) / n   (faithful mode: s * (n-1))
     all_to_all      s * (n-1) / n
     broadcast       s                    (pipelined forward)
+    scatter         s * (n-1) / n        (root's outgoing segments)
+
+Overlap accounting: collectives issued inside a ``ledger.hidden()``
+region (the double-buffered FSDP prefetch, or an ``auto`` plan cell
+tuned as overlapped) book their bytes as *hidden* - expected to be
+scheduled behind compute - while everything else books as *exposed*.
+``counts`` is the number of distinct collective call *sites*;
+``collective_calls`` additionally multiplies by the ambient scale, i.e.
+the true number of collectives launched per step.
 """
 from __future__ import annotations
 
@@ -22,15 +31,23 @@ import contextlib
 from collections import defaultdict
 
 _BYTES: dict = defaultdict(float)
+_EXPOSED: dict = defaultdict(float)
+_HIDDEN: dict = defaultdict(float)
 _COUNTS: dict = defaultdict(int)
+_CALLS: dict = defaultdict(float)   # trip-count-scaled launch count
 _MULT: list = [1.0]
+_HIDDEN_CTX: list = [False]
 _CHOICES: list = []   # autotuner decisions, for benchmark audit
 
 
 def reset() -> None:
     _BYTES.clear()
+    _EXPOSED.clear()
+    _HIDDEN.clear()
     _COUNTS.clear()
+    _CALLS.clear()
     _MULT[:] = [1.0]
+    _HIDDEN_CTX[:] = [False]
     _CHOICES.clear()
 
 
@@ -44,24 +61,51 @@ def scale(mult: float):
         _MULT.pop()
 
 
-def record(kind: str, wire_bytes: float) -> None:
-    _BYTES[kind] += wire_bytes * _MULT[-1]
+@contextlib.contextmanager
+def hidden(flag: bool = True):
+    """Collectives recorded inside are overlap-hidden behind compute."""
+    _HIDDEN_CTX.append(flag)
+    try:
+        yield
+    finally:
+        _HIDDEN_CTX.pop()
+
+
+def in_hidden_region() -> bool:
+    return _HIDDEN_CTX[-1]
+
+
+def record(kind: str, wire_bytes: float, *,
+           hidden: "bool | None" = None) -> None:
+    """``hidden=None`` defers to the ambient ``ledger.hidden()`` region."""
+    h = _HIDDEN_CTX[-1] if hidden is None else hidden
+    m = _MULT[-1]
+    _BYTES[kind] += wire_bytes * m
+    (_HIDDEN if h else _EXPOSED)[kind] += wire_bytes * m
     _COUNTS[kind] += 1
+    _CALLS[kind] += m
 
 
 def record_choice(primitive: str, msg_bytes: int, nranks: int,
-                  backend: str, slicing_factor: int, mode: str) -> None:
+                  backend: str, slicing_factor: int, mode: str,
+                  overlap: bool = False) -> None:
     """Audit trail of ``backend='auto'`` decisions (trace time, like
     ``record``): which concrete (backend, knobs) each collective got."""
     _CHOICES.append({"primitive": primitive, "msg_bytes": int(msg_bytes),
                      "nranks": int(nranks), "backend": backend,
                      "slicing_factor": int(slicing_factor),
-                     "allreduce_mode": mode})
+                     "allreduce_mode": mode, "overlap": bool(overlap)})
 
 
 def snapshot() -> dict:
     return {"wire_bytes": dict(_BYTES), "counts": dict(_COUNTS),
             "total_wire_bytes": float(sum(_BYTES.values())),
+            "exposed_bytes": dict(_EXPOSED),
+            "hidden_bytes": dict(_HIDDEN),
+            "total_exposed_bytes": float(sum(_EXPOSED.values())),
+            "total_hidden_bytes": float(sum(_HIDDEN.values())),
+            "collective_calls": dict(_CALLS),
+            "total_collective_calls": float(sum(_CALLS.values())),
             "auto_choices": list(_CHOICES)}
 
 

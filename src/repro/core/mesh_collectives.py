@@ -67,10 +67,13 @@ def all_gather(x: jnp.ndarray, axis_name: str,
             src = (idx - step) % n
             out = lax.dynamic_update_index_in_dim(out, cur, src, 0)
         gathered.append(out)
-    # Re-interleave chunk rows back into rank-major order.
-    parts = [jnp.concatenate([g[r] for g in gathered], axis=0)
-             for r in range(n)]
-    return jnp.concatenate(parts, axis=0)
+    # Re-interleave chunk rows back into rank-major order: stack to
+    # (chunks, n, lead/chunks, ...), swap to rank-major and flatten -
+    # one transpose instead of O(n * chunks) concatenates.
+    stacked = jnp.stack(gathered, axis=0)
+    lead = x.shape[0] if x.ndim else 1
+    return jnp.swapaxes(stacked, 0, 1).reshape((n * lead,)
+                                               + x.shape[1:])
 
 
 def reduce_scatter(x: jnp.ndarray, axis_name: str,

@@ -1,0 +1,263 @@
+"""Communication/compute overlap subsystem: gradient bucketing and fused
+FSDP gathers.
+
+The training hot path used to issue one collective per parameter leaf
+(alpha-dominated small messages) and to serialize every FSDP AllGather
+against the matmul consuming it.  This module supplies the two fused
+counterparts, mirroring the paper's Sec. 4.4 chunked-stream pipelining at
+the framework level ("Collective Communication for 100k+ GPUs" calls the
+same structure gradient bucketing):
+
+* **Bucketing** (`assign_buckets` + `pack`/`unpack`): coalesce same-dtype
+  leaves that want the *same* collective (same mesh axes) into a small
+  number of flat fused buffers, NCCL-style size-capped, in deterministic
+  leaf (pytree-flatten) order.  `bucketed_sync_grads` then issues one
+  AllReduce per bucket instead of one per leaf, and
+  `make_gather_fn(..., bucket_bytes>0)` issues one FSDP AllGather per
+  bucket per scan row whose AD transpose is the matching fused
+  ReduceScatter.
+* **Prefetch**: `models.model._run_groups` consumes these gathers with an
+  explicit double-buffered carry (prefetch depth 1): layer ``l+1``'s
+  AllGather is issued in the same scan body that computes layer ``l``, so
+  XLA can schedule it as an async collective behind the matmuls.  Those
+  prefetched gathers run under ``ledger.hidden()`` so the trace-time
+  ledger splits wire bytes into exposed vs hidden.
+
+Packing/unpacking is pure data movement (ravel + concatenate + slice), so
+fused collectives are numerically equivalent to the per-leaf path: an
+AllGather is bitwise identical, and a bucketed ring AllReduce sums ranks
+in the same per-element order as the per-leaf one.
+
+This module is mesh-layer generic: it never imports ``repro.models`` -
+partition specs are handed in by the caller (``models.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+MiB = 1024 ** 2
+
+# NCCL's default fused-gradient-buffer cap is 25 MB; same default here.
+DEFAULT_BUCKET_BYTES = 25 * MiB
+
+
+# --------------------------------------------------------------------- #
+# bucket assignment (shape-only, deterministic)
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    """One leaf's position inside a fused flat buffer."""
+
+    index: int          # position in the caller's flat leaf list
+    offset: int         # element offset into the bucket buffer
+    size: int           # element count
+    shape: tuple        # shape to restore on unpack
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    key: tuple          # (group_key, dtype_name)
+    slots: tuple        # tuple[Slot, ...] in deterministic leaf order
+    elems: int          # total element count of the fused buffer
+
+
+def assign_buckets(entries: Sequence[tuple],
+                   cap_bytes: Optional[int]) -> list:
+    """Greedy size-capped bucket assignment.
+
+    ``entries`` is a sequence of ``(index, shape, dtype, group_key)`` in
+    deterministic leaf order (pytree flatten order - jax sorts dict
+    keys).  Leaves are grouped by ``(group_key, dtype)`` and each group
+    is split into buckets of at most ``cap_bytes`` (a single leaf larger
+    than the cap gets its own bucket, like NCCL's oversize buckets).
+    ``cap_bytes=None`` fuses each group into ONE bucket (torch-FSDP's
+    FlatParameter-per-module analog, the right granularity for per-row
+    param gathers); ``cap_bytes <= 0`` degenerates to one bucket per
+    leaf (the per-leaf baseline expressed in the same code path).
+    """
+    groups: dict = {}
+    order: list = []
+    for index, shape, dtype, group_key in entries:
+        dt = jnp.dtype(dtype)
+        key = (group_key, dt.name)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append((index, tuple(shape), dt))
+    buckets: list = []
+    for key in order:
+        slots: list = []
+        elems = 0
+        nbytes = 0
+        for index, shape, dt in groups[key]:
+            size = 1
+            for d in shape:
+                size *= int(d)
+            leaf_bytes = size * dt.itemsize
+            if slots and cap_bytes is not None and (
+                    cap_bytes <= 0 or nbytes + leaf_bytes > cap_bytes):
+                buckets.append(Bucket(key=key, slots=tuple(slots),
+                                      elems=elems))
+                slots, elems, nbytes = [], 0, 0
+            slots.append(Slot(index=index, offset=elems, size=size,
+                              shape=shape))
+            elems += size
+            nbytes += leaf_bytes
+        if slots:
+            buckets.append(Bucket(key=key, slots=tuple(slots),
+                                  elems=elems))
+    return buckets
+
+
+def pack(bucket: Bucket, leaves: Sequence) -> jnp.ndarray:
+    """Fuse the bucket's leaves into one flat 1-D buffer."""
+    parts = [jnp.ravel(leaves[s.index]) for s in bucket.slots]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def unpack(bucket: Bucket, flat: jnp.ndarray) -> list:
+    """Inverse of ``pack``: [(index, leaf)] restored to slot shapes."""
+    return [(s.index, flat[s.offset:s.offset + s.size].reshape(s.shape))
+            for s in bucket.slots]
+
+
+# --------------------------------------------------------------------- #
+# spec helpers (kept local: core must not import repro.models)
+# --------------------------------------------------------------------- #
+
+def _axis_dim(spec: P, axes) -> Optional[int]:
+    """Dim of ``spec`` sharded over ``axes`` (str or tuple), else None."""
+    target = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
+    for i, s in enumerate(spec):
+        if s == axes or s == target or (isinstance(s, str)
+                                        and s in target):
+            return i
+    return None
+
+
+def _spec_axes(spec: P) -> set:
+    flat = set()
+    for s in spec:
+        if s is None:
+            continue
+        for a in (s if isinstance(s, tuple) else (s,)):
+            flat.add(a)
+    return flat
+
+
+def _axes_tuple(axis) -> tuple:
+    if axis is None:
+        return ()
+    return tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+
+
+def _flat_with_specs(tree: Any, specs: Any) -> tuple:
+    """(leaves, spec_leaves, treedef) in matching flatten order."""
+    leaves, treedef = jax.tree.flatten(tree)
+    spec_leaves = treedef.flatten_up_to(specs)
+    return leaves, spec_leaves, treedef
+
+
+# --------------------------------------------------------------------- #
+# bucketed gradient sync (fused AllReduce of replicated-leaf grads)
+# --------------------------------------------------------------------- #
+
+def bucketed_sync_grads(grads: Any, specs: Any, pc, dp_axis,
+                        bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Any:
+    """Fused version of ``models.sharding.sync_grads``.
+
+    Leaves replicated over an axis accumulate only their local grad
+    contribution and need an explicit AllReduce over that axis (FSDP
+    leaves get their sum through the gather's AD transpose; TP-sharded
+    leaves are complete locally).  Here leaves needing the *same*
+    AllReduce (same missing axes, same dtype) are coalesced into
+    size-capped flat buffers so the sync issues a handful of large
+    collectives instead of one per leaf.
+    """
+    dp = _axes_tuple(dp_axis)
+    tp = pc.tp_axis
+    leaves, spec_leaves, treedef = _flat_with_specs(grads, specs)
+
+    entries = []
+    for i, (g, spec) in enumerate(zip(leaves, spec_leaves)):
+        flat_axes = _spec_axes(spec)
+        missing = []
+        if tp is not None and tp not in flat_axes:
+            missing.append(tp)
+        if dp and not any(a in flat_axes for a in dp):
+            missing.extend(dp)
+        if missing:
+            entries.append((i, g.shape, g.dtype, tuple(missing)))
+
+    out = list(leaves)
+    for bucket in assign_buckets(entries, bucket_bytes):
+        missing = bucket.key[0]
+        flat = pack(bucket, leaves)
+        for ax in missing:
+            flat = pc.comm.all_reduce(flat, ax)
+        for index, leaf in unpack(bucket, flat):
+            out[index] = leaf
+    return treedef.unflatten(out)
+
+
+# --------------------------------------------------------------------- #
+# bucketed FSDP gather (fused AllGather; AD transposes to fused RS)
+# --------------------------------------------------------------------- #
+
+def make_gather_fn(all_row_specs: dict, pc, dp_axis,
+                   bucket_bytes: Optional[int] = None):
+    """Returns ``gather(group_key, row_params) -> gathered params``.
+
+    Every leaf whose spec shards a dim over the dp axis is moved to
+    dim 0, raveled, and fused with its same-dtype neighbours into flat
+    buffers; one AllGather per bucket then replaces one per leaf.
+    Rank-major blocks of the gathered buffer are sliced back per leaf
+    with static reshapes (no data-dependent work), so autodiff
+    transposes the whole thing into the matching fused ReduceScatter on
+    the gradient - FSDP's communication pattern at bucket granularity.
+
+    The default ``bucket_bytes=None`` fuses a whole row's same-dtype
+    leaves into one buffer (torch-FSDP's per-module FlatParameter);
+    a positive cap splits NCCL-style, and ``<= 0`` reproduces the
+    per-leaf schedule through the same code path.
+    """
+    def gather(group_key: str, row_params):
+        specs = all_row_specs[group_key]
+        leaves, spec_leaves, treedef = _flat_with_specs(row_params, specs)
+
+        n_total = 1
+        for ax in _axes_tuple(dp_axis):
+            n_total *= lax.axis_size(ax)
+
+        moved: dict = {}
+        dims: dict = {}
+        entries = []
+        for i, (x, spec) in enumerate(zip(leaves, spec_leaves)):
+            dim = _axis_dim(spec, dp_axis)
+            if dim is None:
+                continue
+            m = jnp.moveaxis(x, dim, 0)
+            moved[i] = m
+            dims[i] = dim
+            entries.append((i, m.shape, m.dtype, ()))
+
+        out = list(leaves)
+        src = [moved.get(i, x) for i, x in enumerate(leaves)]
+        for bucket in assign_buckets(entries, bucket_bytes):
+            flat = pack(bucket, src)
+            full = pc.comm.all_gather(flat, dp_axis)
+            blocks = full.reshape(n_total, bucket.elems)
+            for s in bucket.slots:
+                seg = blocks[:, s.offset:s.offset + s.size]
+                m = seg.reshape((n_total,) + s.shape)
+                m = m.reshape((n_total * s.shape[0],) + s.shape[1:])
+                out[s.index] = jnp.moveaxis(m, 0, dims[s.index])
+        return treedef.unflatten(out)
+    return gather

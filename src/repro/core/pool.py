@@ -125,26 +125,33 @@ def execute(s: sched.Schedule, send_buffers: np.ndarray,
     for r in range(s.nranks):
         _init_recv(s, r, send_buffers[r], recv[r])
 
-    wq = {r: list(s.writes[r]) for r in range(s.nranks)}
-    rq = {r: list(s.reads[r]) for r in range(s.nranks)}
+    # Index cursors instead of list.pop(0): the emulator used to be
+    # quadratic in op count, which dominated large-schedule test time.
+    wq = {r: tuple(s.writes[r]) for r in range(s.nranks)}
+    rq = {r: tuple(s.reads[r]) for r in range(s.nranks)}
+    wi = [0] * s.nranks
+    ri = [0] * s.nranks
     # Round-robin one op per stream per iteration: models the write/read
     # stream concurrency of Sec. 4.4.
     stall_rounds = 0
-    while any(wq.values()) or any(rq.values()):
+    while any(wi[r] < len(wq[r]) for r in range(s.nranks)) or \
+            any(ri[r] < len(rq[r]) for r in range(s.nranks)):
         progressed = False
         for r in range(s.nranks):
-            if wq[r]:
-                emu.write(wq[r].pop(0), send_buffers[r])
+            if wi[r] < len(wq[r]):
+                emu.write(wq[r][wi[r]], send_buffers[r])
+                wi[r] += 1
                 progressed = True
         for r in range(s.nranks):
-            if rq[r] and emu.try_read(rq[r][0], recv[r], dtype):
-                rq[r].pop(0)
+            if ri[r] < len(rq[r]) and \
+                    emu.try_read(rq[r][ri[r]], recv[r], dtype):
+                ri[r] += 1
                 progressed = True
         if not progressed:
             stall_rounds += 1
             if stall_rounds > 2:
-                pending = {r: rq[r][0].data_key for r in range(s.nranks)
-                           if rq[r]}
+                pending = {r: rq[r][ri[r]].data_key
+                           for r in range(s.nranks) if ri[r] < len(rq[r])}
                 raise RuntimeError(f"doorbell deadlock; waiting on {pending}")
         else:
             stall_rounds = 0

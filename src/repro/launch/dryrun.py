@@ -42,7 +42,8 @@ from repro.models import model, sharding
 from repro.models.config import ModelConfig
 from repro.models.pcontext import ParallelContext, UNSHARDED
 from repro.optim import AdamWState
-from repro.training.train_loop import TrainConfig, make_train_step
+from repro.training.train_loop import (TrainConfig, make_gather_fn,
+                                       make_train_step)
 
 SHAPES = {
     "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
@@ -189,7 +190,8 @@ def cache_specs(cfg: ModelConfig, cache_tree, dp, batch_sharded: bool,
 # --------------------------------------------------------------------- #
 
 def build_lowerable(arch: str, shape_name: str, mesh, backend: str,
-                    allreduce_mode: str = "two_phase"):
+                    allreduce_mode: str = "two_phase",
+                    bucket_mb: float = 25.0, prefetch: int = 1):
     """Returns (fn_to_lower, example_args) - fn is already jit+shard_map
     wrapped; args are ShapeDtypeStructs."""
     cfg = get_config(arch)
@@ -211,11 +213,15 @@ def build_lowerable(arch: str, shape_name: str, mesh, backend: str,
         pspecs = sharding.param_specs(abstract, cfg, dp_axis=dp_spec,
                                       fsdp=True)
         rspecs = sharding.row_specs(pspecs)
-        gather = sharding.fsdp_gather_fn(rspecs, pc, dp_spec)
         local_b = gbatch // dp_size
         mb = max(1, local_b // 2)   # microbatch of 2 sequences per chip
         tcfg = TrainConfig(remat=True, microbatches=mb, backend=backend,
-                           clip_norm=None)
+                           clip_norm=None, bucket_mb=bucket_mb,
+                           prefetch=prefetch)
+        # bucketed FSDP gathers + double-buffered prefetch (core.overlap)
+        # - the production schedule; --bucket-mb 0 --prefetch 0 restore
+        # the per-leaf serialized baseline for A/B dry-runs.
+        gather = make_gather_fn(tcfg, rspecs, pc, dp_spec)
         inner = make_train_step(cfg, tcfg, pc, gather_fn=gather,
                                 param_spec_tree=pspecs, dp_axis=dp_spec)
         batch = batch_sds(cfg, gbatch, seq)
@@ -281,13 +287,15 @@ def build_lowerable(arch: str, shape_name: str, mesh, backend: str,
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, backend: str,
             out_dir: str, mesh_shape: str = None,
-            allreduce_mode: str = "two_phase") -> dict:
+            allreduce_mode: str = "two_phase",
+            bucket_mb: float = 25.0, prefetch: int = 1) -> dict:
     """``mesh_shape``: 'DPxTP' logical re-factorization of the single pod
     (same 256 chips) - the §Perf mesh-reshape experiments."""
     mesh_name = ("pod" + mesh_shape) if mesh_shape else (
         "pod2x16x16" if multi_pod else "pod16x16")
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "backend": backend, "allreduce_mode": allreduce_mode,
+           "bucket_mb": bucket_mb, "prefetch": prefetch,
            "status": "error"}
     t0 = time.time()
     try:
@@ -302,7 +310,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, backend: str,
         else:
             mesh = make_production_mesh(multi_pod=multi_pod)
         fn, args, cfg = build_lowerable(arch, shape_name, mesh, backend,
-                                        allreduce_mode=allreduce_mode)
+                                        allreduce_mode=allreduce_mode,
+                                        bucket_mb=bucket_mb,
+                                        prefetch=prefetch)
         from repro.core import ledger
         ledger.reset()
         lowered = fn.lower(*args)
@@ -370,6 +380,13 @@ def main() -> None:
                     help="DPxTP single-pod logical mesh override")
     ap.add_argument("--allreduce-mode", default="two_phase",
                     choices=["two_phase", "faithful"])
+    ap.add_argument("--bucket-mb", type=float, default=25.0,
+                    help="grad-sync bucket cap for the train shape; "
+                         "> 0 also row-fuses the FSDP gathers "
+                         "(0 = per-leaf collectives)")
+    ap.add_argument("--prefetch", type=int, default=1, choices=[0, 1],
+                    help="FSDP AllGather prefetch depth for the train "
+                         "shape (0 = serialized baseline)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
@@ -386,7 +403,9 @@ def main() -> None:
             for mp in meshes:
                 rec = run_one(arch, shape, mp, args.backend, args.out,
                               mesh_shape=args.mesh_shape,
-                              allreduce_mode=args.allreduce_mode)
+                              allreduce_mode=args.allreduce_mode,
+                              bucket_mb=args.bucket_mb,
+                              prefetch=args.prefetch)
                 failures += rec["status"] != "ok"
     print(f"[dryrun] done; {failures} failures")
     raise SystemExit(1 if failures else 0)

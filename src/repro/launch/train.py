@@ -45,6 +45,13 @@ def main() -> None:
     ap.add_argument("--allreduce-mode", default="two_phase",
                     choices=["two_phase", "faithful"])
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--bucket-mb", type=float, default=25.0,
+                    help="grad-sync AllReduce bucket cap in MiB; any "
+                         "value > 0 also row-fuses the FSDP gathers "
+                         "(0 = per-leaf collectives)")
+    ap.add_argument("--prefetch", type=int, default=1, choices=[0, 1],
+                    help="FSDP AllGather prefetch depth "
+                         "(0 = serialized gather-then-compute)")
     ap.add_argument("--mesh", default=None,
                     help="DPxTP, e.g. 2x4; default: production mesh")
     ap.add_argument("--multi-pod", action="store_true")
@@ -62,7 +69,8 @@ def main() -> None:
                        slicing_factor=args.slicing_factor,
                        allreduce_mode=args.allreduce_mode,
                        microbatches=args.microbatches, clip_norm=None,
-                       plan_path=args.plan)
+                       plan_path=args.plan, bucket_mb=args.bucket_mb,
+                       prefetch=args.prefetch)
     step, pspecs, bspecs, pc = make_sharded_train_step(
         cfg, tcfg, mesh, dp_axis=dp_axes(mesh))
     tp = mesh.shape["model"]

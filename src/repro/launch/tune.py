@@ -34,6 +34,11 @@ def main() -> None:
     ap.add_argument("--sizes-mib", type=int, nargs="+", default=None)
     ap.add_argument("--nranks", type=int, nargs="+", default=None)
     ap.add_argument("--factors", type=int, nargs="+", default=None)
+    ap.add_argument("--overlap-compute-us", type=float, default=0.0,
+                    help="overlappable compute window per collective "
+                         "(microseconds); > 0 tunes by exposed time "
+                         "max(0, comm - window) and marks cells "
+                         "overlap=True")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
 
@@ -49,7 +54,9 @@ def main() -> None:
 
     progress = None if args.quiet else (lambda msg: print(f"  {msg}"))
     t0 = time.time()
-    plan = tuner.generate_plan(grid, progress=progress)
+    plan = tuner.generate_plan(
+        grid, overlap_compute=args.overlap_compute_us * 1e-6,
+        progress=progress)
     dt = time.time() - t0
 
     out = args.out or tuner.default_plan_path()

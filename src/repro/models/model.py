@@ -115,9 +115,16 @@ def _embed_inputs(params: Params, batch: dict, cfg: ModelConfig,
 
 
 def _run_groups(params: Params, h, cfg, pc, positions, encoder_out,
-                remat: bool, window=None, gather_fn=None):
+                remat: bool, window=None, gather_fn=None,
+                prefetch: int = 0):
+    """``prefetch >= 1`` enables the double-buffered FSDP prefetch: each
+    scan body issues layer ``l+1``'s param AllGather (carried explicitly)
+    alongside layer ``l``'s compute, so XLA schedules the gather as an
+    async collective hidden behind the matmuls.  The prefetched gathers
+    run under ``ledger.hidden()`` (the prologue gather stays exposed)."""
     groups = blocks.scan_groups(cfg)
     aux_total = jnp.float32(0.0)
+    prefetching = gather_fn is not None and prefetch >= 1
 
     def make_body(kind, group_key):
         def body(carry, p):
@@ -130,12 +137,62 @@ def _run_groups(params: Params, h, cfg, pc, positions, encoder_out,
             return out, aux
         return jax.checkpoint(body) if remat else body
 
+    def make_prefetch_body(kind, group_key):
+        """carry = (h, gathered params of the layer to compute now);
+        xs = raw (sharded) params of the NEXT layer."""
+        def body(carry, p_next):
+            hh, p_cur = carry
+            with ledger.hidden():
+                p_pre = gather_fn(group_key, p_next)
+            out, aux = blocks.row_forward(p_cur, hh, kind, cfg, pc,
+                                          positions,
+                                          encoder_out=encoder_out,
+                                          window=window)
+            return (out, p_pre), aux
+        return jax.checkpoint(body) if remat else body
+
+    def make_consume(kind):
+        """Epilogue: compute one row from already-gathered params."""
+        def body(carry, p):
+            out, aux = blocks.row_forward(p, carry, kind, cfg, pc,
+                                          positions,
+                                          encoder_out=encoder_out,
+                                          window=window)
+            return out, aux
+        return jax.checkpoint(body) if remat else body
+
     for gi, g in enumerate(groups):
         if g.shared:
-            body = make_body("a", "shared_a")
-            for _ in range(g.count):
-                h, aux = body(h, params["shared_a"])
-                aux_total += aux
+            if prefetching:
+                # one param set reused count x: gather it ONCE instead of
+                # per occurrence (count x fewer AllGathers; the AD
+                # transpose fuses the count ReduceScatters into one)
+                sp = gather_fn("shared_a", params["shared_a"])
+                body = make_consume("a")
+                for _ in range(g.count):
+                    h, aux = body(h, sp)
+                    aux_total += aux
+            else:
+                body = make_body("a", "shared_a")
+                for _ in range(g.count):
+                    h, aux = body(h, params["shared_a"])
+                    aux_total += aux
+        elif prefetching:
+            stacked = params[f"g{gi}"]
+            first = jax.tree.map(lambda x: x[0], stacked)
+            gathered = gather_fn(f"g{gi}", first)    # exposed prologue
+            if g.count > 1:
+                rest = jax.tree.map(lambda x: x[1:], stacked)
+                # trace-time ledger: the prefetch body runs count-1 x;
+                # the prologue gather and epilogue row run once each, so
+                # totals match the non-prefetched schedule exactly.
+                with ledger.scale(g.count - 1):
+                    (h, gathered), auxs = jax.lax.scan(
+                        make_prefetch_body(g.kind, f"g{gi}"),
+                        (h, gathered), rest)
+                aux_total += jnp.sum(auxs)
+            h, aux_last = make_consume(g.kind)(h, gathered)
+            aux_total += aux_last
         else:
             # trace-time collective ledger: the scan body runs count x
             with ledger.scale(g.count):
@@ -151,18 +208,21 @@ def _run_groups(params: Params, h, cfg, pc, positions, encoder_out,
 
 def loss_fn(params: Params, batch: dict, cfg: ModelConfig,
             pc: ParallelContext, remat: bool = True,
-            window: Optional[int] = None, gather_fn=None):
+            window: Optional[int] = None, gather_fn=None,
+            prefetch: int = 0):
     """batch: tokens (B, L_text), labels (B, L_text), optional
     frontend/source.  ``gather_fn(group_key, row_params)`` is the FSDP
-    hook (sharding.fsdp_gather_fn).  Returns (loss, aux_dict)."""
+    hook (sharding.fsdp_gather_fn / core.overlap.make_gather_fn);
+    ``prefetch >= 1`` double-buffers it (see _run_groups).  Returns
+    (loss, aux_dict)."""
     if gather_fn is not None:
         # embed is used at both ends of the step: gather once up front.
-        # shared_a is gathered inside _run_groups per occurrence.
         params = dict(params, embed=gather_fn("embed", params["embed"]))
     h, n_prefix, encoder_out = _embed_inputs(params, batch, cfg, pc)
     positions = jnp.arange(h.shape[1])
     h, aux = _run_groups(params, h, cfg, pc, positions, encoder_out,
-                         remat=remat, window=window, gather_fn=gather_fn)
+                         remat=remat, window=window, gather_fn=gather_fn,
+                         prefetch=prefetch)
     h = layers.rms_norm(h, params["final_norm"], cfg.norm_eps)
     if n_prefix:
         h = h[:, n_prefix:]

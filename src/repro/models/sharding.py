@@ -161,6 +161,12 @@ def sync_grads(grads: Any, specs: Any, pc: ParallelContext,
     * leaves replicated over an axis accumulate only their local
       contribution and need an explicit AllReduce over that axis
       (Megatron's layernorm-grad sync, generalized).
+
+    This is the per-leaf reference path (one collective per leaf); the
+    production trainer uses ``core.overlap.bucketed_sync_grads``, which
+    fuses same-(dtype, axes) leaves into size-capped flat buffers and is
+    numerically equivalent (tests/_mesh_runner.py asserts bitwise
+    equality for fp32 under the ring backend).
     """
     dp = tuple(dp_axis) if isinstance(dp_axis, (tuple, list)) else \
         ((dp_axis,) if dp_axis else ())
@@ -195,6 +201,10 @@ def fsdp_gather_fn(all_row_specs: dict, pc: ParallelContext,
     AllGather (via the CXL-CCL Communicator) every leaf whose spec shards
     a dim over the dp axis; autodiff transposes it into the matching
     ReduceScatter on the gradient - exactly FSDP's communication pattern.
+
+    Per-leaf reference path; the production trainer uses
+    ``core.overlap.make_gather_fn`` (same contract, fused size-capped
+    buckets: one AllGather per bucket instead of one per leaf).
     """
     def gather(group_key: str, row_params):
         specs = all_row_specs[group_key]

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import ledger
+from repro.core import ledger, overlap
 from repro.core.api import Communicator
 from repro.models import model, sharding
 from repro.models.config import ModelConfig
@@ -39,6 +39,31 @@ class TrainConfig:
     slicing_factor: int = 4
     allreduce_mode: str = "two_phase"
     plan_path: Optional[str] = None      # autotuning plan for 'auto'
+    # communication/compute overlap (core.overlap): NCCL-style cap on
+    # the fused grad-sync AllReduce buffers; > 0 also switches the FSDP
+    # gathers to row-fused buckets, <= 0 restores the per-leaf baseline.
+    # prefetch=1 double-buffers the FSDP AllGather (0 restores the
+    # serialized gather-then-compute schedule).
+    bucket_mb: float = 25.0
+    prefetch: int = 1
+
+    @property
+    def bucket_bytes(self) -> int:
+        return int(self.bucket_mb * 1024 * 1024)
+
+
+def make_gather_fn(tcfg: TrainConfig, rspecs: dict, pc: ParallelContext,
+                   dp_axis):
+    """FSDP gather hook for the configured overlap mode: row-fused
+    buckets (``core.overlap``; the gather cap is intentionally None -
+    a row is one FlatParameter regardless of ``bucket_mb``, which only
+    caps the grad-sync buffers) or the per-leaf reference when
+    ``bucket_mb <= 0``.  Shared by the trainer and the dry-run so the
+    two always lower the same schedule."""
+    if tcfg.bucket_bytes > 0:
+        return overlap.make_gather_fn(rspecs, pc, dp_axis,
+                                      bucket_bytes=None)
+    return sharding.fsdp_gather_fn(rspecs, pc, dp_axis)
 
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
@@ -55,7 +80,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
 
     def lf(p, b):
         loss, aux = model.loss_fn(p, b, cfg, pc, remat=tcfg.remat,
-                                  gather_fn=gather_fn)
+                                  gather_fn=gather_fn,
+                                  prefetch=tcfg.prefetch)
         if pc.dp_axis is not None:
             loss = pc.dp_all_reduce_mean(loss)
         return loss, aux
@@ -93,8 +119,15 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                 (loss, aux), grads = jax.value_and_grad(
                     lf, has_aux=True)(params, batch)
         if param_spec_tree is not None:
-            grads = sharding.sync_grads(grads, param_spec_tree, pc,
-                                        dp_axis)
+            if tcfg.bucket_bytes > 0:
+                # fused (bucketed) replicated-grad sync: a handful of
+                # large AllReduces instead of one per leaf
+                grads = overlap.bucketed_sync_grads(
+                    grads, param_spec_tree, pc, dp_axis,
+                    bucket_bytes=tcfg.bucket_bytes)
+            else:
+                grads = sharding.sync_grads(grads, param_spec_tree, pc,
+                                            dp_axis)
         gnorm = jnp.float32(0.0)
         if tcfg.clip_norm is not None and pc.tp_axis is None:
             grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
@@ -138,7 +171,7 @@ def make_sharded_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
     pspecs = sharding.param_specs(abstract, cfg, model_axis=tp_axis,
                                   dp_axis=dp_spec, fsdp=True)
     rspecs = sharding.row_specs(pspecs)
-    gather = sharding.fsdp_gather_fn(rspecs, pc, dp_spec)
+    gather = make_gather_fn(tcfg, rspecs, pc, dp_spec)
     bspecs = make_batch_specs(cfg, dp_spec)
     inner = make_train_step(cfg, tcfg, pc, gather_fn=gather,
                             param_spec_tree=pspecs, dp_axis=dp_spec)

@@ -11,7 +11,8 @@ Workflow::
     python -m repro.launch.tune --out plan.json     # offline
     python -m repro.launch.train --backend auto --plan plan.json
 """
-from repro.tuner.costmodel import predict_time
+from repro.tuner.costmodel import (predict_exposed_time, predict_time,
+                                   roofline_compute_time)
 from repro.tuner.plan import (Choice, Plan, hardware_fingerprint,
                               load_plan, save_plan, size_bucket)
 from repro.tuner.runtime import (activate_plan_file, clear_active_plan,
@@ -22,7 +23,8 @@ from repro.tuner.sweep import (DEFAULT_GRID, SMOKE_GRID, TuneGrid,
 
 __all__ = [
     "Choice", "Plan", "TuneGrid", "DEFAULT_GRID", "SMOKE_GRID",
-    "predict_time", "generate_plan", "hardware_fingerprint",
+    "predict_time", "predict_exposed_time", "roofline_compute_time",
+    "generate_plan", "hardware_fingerprint",
     "size_bucket", "load_plan", "save_plan", "activate_plan_file",
     "clear_active_plan", "default_plan_path", "ensure_default_plan",
     "get_active_plan", "set_active_plan",

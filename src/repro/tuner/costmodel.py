@@ -12,6 +12,15 @@ nranks, msg_bytes, knobs) point:
   followed by all_gather(S/n), matching what ``mesh_collectives``
   executes; ``faithful`` is the paper's single-phase schedule.
 
+Overlap-aware costing prices a collective against the compute window it
+is scheduled behind (the double-buffered FSDP prefetch): the exposed
+time is ``max(0, comm - overlappable_compute)``, with the overlappable
+window itself bounded by roofline residency
+(``roofline_compute_time``).  The sweep can minimize exposed rather
+than in-isolation time, which lets ``auto`` trade wire bytes for
+overlap (e.g. keep a cheaper-to-issue backend whose extra wire time is
+hidden anyway).
+
 Simulator runs are memoized - the sweep revisits (primitive, size,
 nranks) many times across slicing factors and the two-phase composition
 reuses the N->N runs.
@@ -21,7 +30,7 @@ from __future__ import annotations
 import functools
 
 from repro.core import ibmodel, simulator
-from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
+from repro.core.hw import (CXL_POOL, INFINIBAND, TPU_V5E, CXLPoolConfig,
                            InfiniBandConfig)
 
 
@@ -54,6 +63,33 @@ def predict_time(backend: str, primitive: str, nranks: int, msg_bytes: int,
         return _sim_time(primitive, nranks, msg_bytes, slicing_factor,
                          pool)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def roofline_compute_time(flops: float, hbm_bytes: float = 0.0, *,
+                          peak_flops: float = TPU_V5E.peak_flops_bf16,
+                          hbm_bw: float = TPU_V5E.hbm_bw) -> float:
+    """Roofline residency of a compute region: the window a collective
+    can hide behind is bounded by whichever resource the region
+    saturates (MXU or HBM), not by wall-clock guesses."""
+    if flops < 0 or hbm_bytes < 0:
+        raise ValueError("flops/bytes must be non-negative")
+    return max(flops / peak_flops, hbm_bytes / hbm_bw)
+
+
+def predict_exposed_time(backend: str, primitive: str, nranks: int,
+                         msg_bytes: int, *,
+                         overlappable_compute: float = 0.0,
+                         slicing_factor: int = 4,
+                         allreduce_mode: str = "two_phase",
+                         pool: CXLPoolConfig = CXL_POOL,
+                         ib: InfiniBandConfig = INFINIBAND) -> float:
+    """Exposed (non-hidden) time of a collective scheduled behind
+    ``overlappable_compute`` seconds of independent compute:
+    ``max(0, comm - overlappable_compute)``."""
+    t = predict_time(backend, primitive, nranks, msg_bytes,
+                     slicing_factor=slicing_factor,
+                     allreduce_mode=allreduce_mode, pool=pool, ib=ib)
+    return max(0.0, t - max(0.0, overlappable_compute))
 
 
 def cache_clear() -> None:

@@ -28,7 +28,8 @@ from typing import Optional
 from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
                            InfiniBandConfig)
 
-PLAN_VERSION = 1
+PLAN_VERSION = 2          # v2 adds per-cell overlap fields (v1 loads too)
+_READABLE_VERSIONS = (1, 2)
 
 
 def hardware_fingerprint(pool: CXLPoolConfig = CXL_POOL,
@@ -54,7 +55,14 @@ class Choice:
     slicing_factor: int = 4
     allreduce_mode: str = "two_phase"
     predicted_time: float = 0.0        # cost-model time of this choice
+                                       # (exposed time when overlap-tuned)
     baseline_time: float = 0.0         # best fixed-knob alternative
+    # Overlap-aware costing (ROADMAP "overlap-aware costing"): when the
+    # cell was tuned against the compute it overlaps, ``overlap`` is True
+    # and ``hidden_time`` is the wire time the roofline-residency model
+    # expects compute to hide (exposed = wire - hidden).
+    overlap: bool = False
+    hidden_time: float = 0.0
 
 
 PlanKey = tuple  # (primitive, bucket, nranks)
@@ -104,7 +112,7 @@ class Plan:
 
     @classmethod
     def from_json(cls, doc: dict) -> "Plan":
-        if doc.get("version") != PLAN_VERSION:
+        if doc.get("version") not in _READABLE_VERSIONS:
             raise ValueError(
                 f"unsupported plan version {doc.get('version')!r}")
         plan = cls(fingerprint=doc["fingerprint"],
@@ -116,7 +124,10 @@ class Plan:
                 slicing_factor=int(e["slicing_factor"]),
                 allreduce_mode=e["allreduce_mode"],
                 predicted_time=float(e["predicted_time"]),
-                baseline_time=float(e["baseline_time"]))
+                baseline_time=float(e["baseline_time"]),
+                # v1 plans carry no overlap fields: cost-in-isolation
+                overlap=bool(e.get("overlap", False)),
+                hidden_time=float(e.get("hidden_time", 0.0)))
         return plan
 
 

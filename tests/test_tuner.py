@@ -148,12 +148,12 @@ def test_communicator_accepts_auto(tiny_plan):
 def test_auto_choice_follows_plan_and_audits(tiny_plan):
     comm = Communicator(backend="auto", plan=tiny_plan)
     ledger.reset()
-    be, factor, mode = comm._choice("all_gather", 16 * MiB, 3)
+    be, factor, mode, ov = comm._choice("all_gather", 16 * MiB, 3)
     want = tiny_plan.lookup("all_gather", 16 * MiB, 3)
-    assert (be, factor, mode) == (want.backend, want.slicing_factor,
-                                  want.allreduce_mode)
+    assert (be, factor, mode, ov) == (want.backend, want.slicing_factor,
+                                      want.allreduce_mode, want.overlap)
     # untuned primitive falls back to ring with the communicator knobs
-    be2, _, _ = comm._choice("scatter", 1 * MiB, 3)
+    be2, _, _, _ = comm._choice("scatter", 1 * MiB, 3)
     assert be2 == "ring"
     audit = ledger.snapshot()["auto_choices"]
     assert [a["primitive"] for a in audit] == ["all_gather", "scatter"]
@@ -167,7 +167,7 @@ def test_auto_fixed_backends_do_not_audit():
     ledger.reset()
     comm = Communicator(backend="cxl", slicing_factor=8)
     assert comm._choice("all_gather", MiB, 4) == (
-        "cxl", 8, "two_phase")
+        "cxl", 8, "two_phase", False)
     assert ledger.snapshot()["auto_choices"] == []
 
 
