@@ -8,6 +8,8 @@ Prints ``name,value,notes`` CSV.  Modules:
   llm      - FSDP Llama-3-8B case study (Sec. 5.5)
   autotune - plan-driven backend='auto' vs fixed backends
   overlap  - bucketed+prefetched FSDP step vs per-leaf serialized
+  topology - hierarchical decomposition vs flat per-level recursion on
+             a 3-level (pod/node/gpu) multi-fabric topology
 
 ``--smoke`` runs the fast CI path: coarse-grid plan generation + the
 autotune and overlap audits (exercises the whole tuner + overlap stack
@@ -23,7 +25,7 @@ import time
 
 from benchmarks import (autotune, fig3_characterization, fig9_collectives,
                         fig10_scalability, fig11_chunks, llm_case_study,
-                        overlap)
+                        overlap, topology)
 
 MODULES = [
     ("fig3", fig3_characterization),
@@ -33,9 +35,10 @@ MODULES = [
     ("llm", llm_case_study),
     ("autotune", autotune),
     ("overlap", overlap),
+    ("topology", topology),
 ]
 
-SMOKE_MODULES = ("fig3", "autotune", "overlap")
+SMOKE_MODULES = ("fig3", "autotune", "overlap", "topology")
 
 
 def main() -> None:

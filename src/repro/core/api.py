@@ -13,24 +13,41 @@ Every collective in the training/serving stack goes through a
              (backend, slicing_factor, allreduce_mode) under the offline
              cost model, and the ledger records the decision taken.
 
-Axes may be a single name or a tuple (e.g. ``("pod", "data")`` for the
-multi-pod FSDP axis); tuple axes are handled hierarchically, innermost
-axis first - on the real cluster that is "within the rack-scale CXL pool
-first, across pods second", matching the paper's expectation that one pool
-spans a small number of nodes (Sec. 5.3).  Under ``auto`` each level of
-the hierarchy is tuned independently (the axis sizes differ).
+Axes may be a single name or a tuple (e.g. ``("pod", "node", "gpu")``),
+ordered outermost level first - rank-major, matching the repo's layout
+convention.  Tuple axes decompose *hierarchically* against the active
+``core.topology.Topology`` (explicit ``topology=`` field, else the
+process-wide active topology, else the one embedded in an ``auto``
+plan's metadata):
+
+* AllReduce = ReduceScatter down the inner levels, AllReduce across the
+  outermost level on the 1/prod(inner) shard, AllGather back out - each
+  byte crosses the slow pool-spanning fabric once instead of the full
+  payload crossing at every level;
+* Broadcast = Scatter within the root's inner group, Broadcast of the
+  1/prod(inner) pieces across the outer level, AllGather within every
+  inner group (per-level roots derived from the flat rank-major root);
+* Gather/Scatter/Reduce recurse with per-level roots so only one level
+  carries cross-pool traffic.
+
+Under ``auto``, every level resolves independently against the plan
+cell keyed by (primitive, size, axis size, level, fabric fingerprint),
+and the ledger attributes wire bytes to the level/fabric that carries
+them.  Without a topology, tuple axes fall back to the flat per-level
+recursion for ``ring`` (a single fused ``psum``) and to the same
+hierarchical decomposition - untagged - for ``cxl``/``auto``.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import TYPE_CHECKING, Optional, Sequence, Union
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core import ledger
 from repro.core import mesh_collectives as mc
+from repro.core import topology as topo_mod
 
 if TYPE_CHECKING:                     # avoid import cycle at runtime
     from repro.tuner.plan import Plan
@@ -54,6 +71,12 @@ class Communicator:
     # eq/hash: the plan only steers trace-time dispatch.
     plan: Optional["Plan"] = dataclasses.field(
         default=None, compare=False, repr=False)
+    # Cluster topology for hierarchical decomposition of tuple axes;
+    # falls back to the process-wide active topology
+    # (core.topology.set_active_topology), then to the topology embedded
+    # in the plan's metadata.  Part of eq/hash: it changes the traced
+    # collective structure, not just which plan cell resolves.
+    topology: Optional[topo_mod.Topology] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -67,96 +90,214 @@ class Communicator:
                 f"slicing_factor must be an integer >= 1, got "
                 f"{self.slicing_factor!r}")
 
-    # -- plan resolution --------------------------------------------------
+    # -- topology / plan resolution ---------------------------------------
 
-    def _choice(self, primitive: str, msg_bytes: int,
-                n: int) -> tuple[str, int, str, bool]:
+    def _topo(self) -> Optional[topo_mod.Topology]:
+        if self.topology is not None:
+            return self.topology
+        active = topo_mod.get_active_topology()
+        if active is not None:
+            return active
+        if self.backend == "auto" and self.plan is not None:
+            return self.plan.topology()
+        return None
+
+    def _choice(self, primitive: str, msg_bytes: int, n: int,
+                topo: Optional[topo_mod.Topology] = None,
+                ax: Optional[str] = None) -> tuple[str, int, str, bool]:
         """Resolve (backend, slicing_factor, allreduce_mode, overlap) for
-        one collective call.  Static under ``jit`` (sizes and axis sizes
-        are trace-time constants), so this costs nothing at run time.
-        ``overlap`` is True when an overlap-aware plan tuned this cell
-        against the compute it expects to hide behind; the ledger then
-        books the wire bytes as hidden rather than exposed."""
+        one collective call at one topology level.  Static under ``jit``
+        (sizes and axis sizes are trace-time constants), so this costs
+        nothing at run time.  ``overlap`` is True when an overlap-aware
+        plan tuned this cell against the compute it expects to hide
+        behind; the ledger then books the wire bytes as hidden."""
         if self.backend != "auto":
             return (self.backend, self.slicing_factor,
                     self.allreduce_mode, False)
         plan = self.plan
         if plan is None:
             from repro.tuner import runtime as tuner_runtime
-            plan = tuner_runtime.ensure_default_plan()
-        ch = plan.lookup(primitive, msg_bytes, n)
+            plan = tuner_runtime.ensure_default_plan(topology=topo)
+        level = topo.level_for(ax) if (topo is not None and ax) else None
+        lkey = topo.level_key(ax) if level is not None else None
+        ch = plan.lookup(primitive, msg_bytes, n, level=lkey)
         if ch is None:     # primitive absent from the plan: ring baseline
             backend, factor, mode, overlap = (
                 "ring", self.slicing_factor, self.allreduce_mode, False)
+            pred = base = 0.0
         else:
             backend, factor, mode, overlap = (
                 ch.backend, ch.slicing_factor, ch.allreduce_mode,
                 ch.overlap)
-        ledger.record_choice(primitive, msg_bytes, n, backend, factor,
-                             mode, overlap=overlap)
+            pred, base = ch.predicted_time, ch.baseline_time
+        if level is not None and backend not in level.backends():
+            # a flat (level-agnostic) cell can resolve under a topology
+            # via the lookup fallback, but the pool schedule does not
+            # exist off the pool: never drive an ib/ici level with it
+            backend = "ring"
+        ledger.record_choice(
+            primitive, msg_bytes, n, backend, factor, mode,
+            overlap=overlap, level=ax if level is not None else None,
+            fabric=level.fabric if level is not None else None,
+            predicted_time=pred, baseline_time=base)
         return backend, factor, mode, overlap
+
+    def _rec(self, kind: str, wire: float, ov: bool,
+             topo: Optional[topo_mod.Topology], ax: str) -> None:
+        level = topo.level_for(ax) if topo is not None else None
+        ledger.record(kind, wire, hidden=True if ov else None,
+                      level=ax if level is not None else None,
+                      fabric=level.fabric if level is not None else None)
+
+    # -- per-level single-axis dispatchers --------------------------------
+
+    def _ar_level(self, x: jnp.ndarray, ax: str,
+                  topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
+        n = lax.axis_size(ax)
+        s = ledger.nbytes(x)
+        backend, factor, mode, ov = self._choice("all_reduce", s, n,
+                                                 topo, ax)
+        wire = s * (n - 1) if mode == "faithful" and backend == "cxl" \
+            else 2 * s * (n - 1) / n
+        self._rec("all_reduce", wire, ov, topo, ax)
+        if backend == "ring":
+            return lax.psum(x, ax)
+        return mc.all_reduce(x, ax, mode=mode, n_chunks=factor)
+
+    def _rs_level(self, x: jnp.ndarray, ax: str,
+                  topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
+        n = lax.axis_size(ax)
+        s = ledger.nbytes(x)
+        backend, factor, _, ov = self._choice("reduce_scatter", s, n,
+                                              topo, ax)
+        self._rec("reduce_scatter", s * (n - 1) / n, ov, topo, ax)
+        if backend == "ring":
+            return lax.psum_scatter(x, ax, scatter_dimension=0,
+                                    tiled=True)
+        return mc.reduce_scatter(x, ax, n_chunks=factor)
+
+    def _ag_level(self, x: jnp.ndarray, ax: str,
+                  topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
+        n = lax.axis_size(ax)
+        s = ledger.nbytes(x)
+        backend, factor, _, ov = self._choice("all_gather", s, n,
+                                              topo, ax)
+        self._rec("all_gather", s * (n - 1), ov, topo, ax)
+        if backend == "ring":
+            return lax.all_gather(x, ax, tiled=True)
+        return mc.all_gather(x, ax, n_chunks=factor)
+
+    def _broadcast_level(self, x: jnp.ndarray, ax: str, root: int,
+                         topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
+        n = lax.axis_size(ax)
+        if n == 1:
+            return x
+        s = ledger.nbytes(x)
+        backend, factor, _, ov = self._choice("broadcast", s, n, topo, ax)
+        self._rec("broadcast", float(s), ov, topo, ax)
+        if backend == "ring":
+            idx = lax.axis_index(ax)
+            masked = jnp.where(idx == root, x, jnp.zeros_like(x))
+            return lax.psum(masked, ax)
+        return mc.broadcast(x, ax, root=root, n_chunks=factor)
+
+    def _reduce_level(self, x: jnp.ndarray, ax: str, root: int,
+                      topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
+        n = lax.axis_size(ax)
+        if n == 1:
+            return x
+        s = ledger.nbytes(x)
+        backend, factor, _, ov = self._choice("reduce", s, n, topo, ax)
+        self._rec("reduce", 2 * s * (n - 1) / n, ov, topo, ax)
+        if backend == "ring":
+            idx = lax.axis_index(ax)
+            total = lax.psum(x, ax)
+            return jnp.where(idx == root, total, jnp.zeros_like(total))
+        return mc.reduce(x, ax, root=root, n_chunks=factor)
+
+    def _gather_level(self, x: jnp.ndarray, ax: str, root: int,
+                      topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
+        n = lax.axis_size(ax)
+        if n == 1:
+            return x
+        s = ledger.nbytes(x)
+        backend, factor, _, ov = self._choice("gather", s, n, topo, ax)
+        self._rec("gather", s * (n - 1), ov, topo, ax)
+        if backend == "ring":
+            idx = lax.axis_index(ax)
+            full = lax.all_gather(x, ax, tiled=True)
+            return jnp.where(idx == root, full, jnp.zeros_like(full))
+        return mc.gather(x, ax, root=root, n_chunks=factor)
+
+    def _scatter_level(self, x: jnp.ndarray, ax: str, root: int,
+                       topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
+        n = lax.axis_size(ax)
+        if n == 1:
+            return x
+        s = ledger.nbytes(x)
+        backend, factor, _, ov = self._choice("scatter", s, n, topo, ax)
+        # root pushes every segment but its own: s*(n-1)/n wire bytes
+        self._rec("scatter", s * (n - 1) / n, ov, topo, ax)
+        if backend == "ring":
+            # masked-psum broadcast inlined so the ledger books the op
+            # once as 'scatter' (delegating to _broadcast_level would
+            # double-count the payload as 'broadcast')
+            idx = lax.axis_index(ax)
+            masked = jnp.where(idx == root, x, jnp.zeros_like(x))
+            rooted = lax.psum(masked, ax)
+            segs = rooted.reshape((n, x.shape[0] // n) + x.shape[1:])
+            return lax.dynamic_index_in_dim(segs, idx, 0, keepdims=False)
+        return mc.scatter(x, ax, root=root, n_chunks=factor)
 
     # -- N->N primitives (the FSDP / TP / MoE hot path) ------------------
 
     def all_reduce(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
-        s = ledger.nbytes(x)
-        if self.backend == "ring":
-            # single fused psum over the whole (possibly tuple) axis: one
-            # reduction order, matching XLA's own lowering exactly
-            for ax in _axes(axis):
+        axes = _axes(axis)
+        topo = self._topo()
+        if len(axes) == 1:
+            return self._ar_level(x, axes[0], topo)
+        hier = topo is not None and topo.covers(axes)
+        if self.backend == "ring" and not hier:
+            # single fused psum over the whole tuple axis: one reduction
+            # order, matching XLA's own lowering exactly
+            s = ledger.nbytes(x)
+            for ax in axes:
                 n = lax.axis_size(ax)
-                ledger.record("all_reduce", 2 * s * (n - 1) / n)
-            return lax.psum(x, axis if isinstance(axis, str)
-                            else tuple(axis))
-        out = x
-        for ax in _axes(axis):  # innermost (pool-local) axis first
-            n = lax.axis_size(ax)
-            backend, factor, mode, ov = self._choice("all_reduce", s, n)
-            wire = s * (n - 1) if mode == "faithful" and \
-                backend == "cxl" else 2 * s * (n - 1) / n
-            ledger.record("all_reduce", wire,
-                          hidden=True if ov else None)
-            if backend == "ring":
-                out = lax.psum(out, ax)
-            else:
-                out = mc.all_reduce(out, ax, mode=mode, n_chunks=factor)
-        return out
+                self._rec("all_reduce", 2 * s * (n - 1) / n, False, topo,
+                          ax)
+            return lax.psum(x, tuple(axes))
+        # hierarchical decomposition: RS down the inner levels, AR across
+        # the outermost on the shard, AG back out
+        return mc.hierarchical_all_reduce(
+            x, axes,
+            rs_fn=lambda z, ax: self._rs_level(z, ax, topo),
+            ar_fn=lambda z, ax: self._ar_level(z, ax, topo),
+            ag_fn=lambda z, ax: self._ag_level(z, ax, topo))
 
     def all_gather(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
         """Tiled gather along axis 0, rank-major over the (possibly
         hierarchical) axis spec: outer axis index is most significant."""
         axes = _axes(axis)
+        topo = self._topo()
         out = x
         # Inner (minor, pool-local) axis first; the outer gather then
-        # stacks whole pool-level blocks, matching P((outer, inner)) layout.
+        # stacks whole pool-level blocks, matching P((outer, inner))
+        # layout.  Payload grows level by level, so this order is also
+        # the hierarchy-optimal one: the outer fabric carries each byte
+        # exactly once.
         for ax in reversed(axes):
-            n = lax.axis_size(ax)
-            s = ledger.nbytes(out)
-            backend, factor, _, ov = self._choice("all_gather", s, n)
-            ledger.record("all_gather", s * (n - 1),
-                          hidden=True if ov else None)
-            if backend == "ring":
-                out = lax.all_gather(out, ax, tiled=True)
-            else:
-                out = mc.all_gather(out, ax, n_chunks=factor)
+            out = self._ag_level(out, ax, topo)
         return out
 
     def reduce_scatter(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
         """Reduce-scatter along axis 0, the inverse layout of all_gather
-        (outer axis most significant)."""
+        (outer axis most significant).  Outer level first: the payload
+        shrinks by each level's size before the next fabric sees it."""
         axes = _axes(axis)
+        topo = self._topo()
         out = x
         for ax in axes:  # outer axis first: inverse of gather
-            n = lax.axis_size(ax)
-            s = ledger.nbytes(out)
-            backend, factor, _, ov = self._choice("reduce_scatter", s, n)
-            ledger.record("reduce_scatter", s * (n - 1) / n,
-                          hidden=True if ov else None)
-            if backend == "ring":
-                out = lax.psum_scatter(out, ax, scatter_dimension=0,
-                                       tiled=True)
-            else:
-                out = mc.reduce_scatter(out, ax, n_chunks=factor)
+            out = self._rs_level(out, ax, topo)
         return out
 
     def all_to_all(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
@@ -164,11 +305,12 @@ class Communicator:
         if len(axes) != 1:
             raise NotImplementedError("all_to_all is single-axis")
         ax = axes[0]
+        topo = self._topo()
         n_ = lax.axis_size(ax)
         s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("all_to_all", s, n_)
-        ledger.record("all_to_all", s * (n_ - 1) / n_,
-                      hidden=True if ov else None)
+        backend, factor, _, ov = self._choice("all_to_all", s, n_,
+                                              topo, ax)
+        self._rec("all_to_all", s * (n_ - 1) / n_, ov, topo, ax)
         if backend == "ring":
             n = n_
             if x.shape[0] % n:
@@ -180,81 +322,83 @@ class Communicator:
         return mc.all_to_all(x, ax, n_chunks=factor)
 
     # -- rooted primitives ------------------------------------------------
+    # Tuple axes decompose with per-level roots derived from the flat
+    # rank-major ``root`` index, so cross-pool traffic moves each byte
+    # once (see the module docstring).
+
+    @staticmethod
+    def _split_root(axes: tuple, root: int) -> tuple:
+        """Split a flat rank-major root index at the outermost level:
+        (inner axes, prod(inner sizes), outer root, inner root)."""
+        rest = axes[1:]
+        prod_rest = 1
+        for a in rest:
+            prod_rest *= lax.axis_size(a)
+        r_out, r_rest = divmod(root, prod_rest)
+        return rest, prod_rest, r_out, r_rest
 
     def broadcast(self, x: jnp.ndarray, axis: AxisSpec,
                   root: int = 0) -> jnp.ndarray:
         axes = _axes(axis)
-        if len(axes) != 1:
-            raise NotImplementedError("broadcast is single-axis")
-        ax = axes[0]
-        n_ = lax.axis_size(ax)
-        backend, factor, _, ov = self._choice("broadcast",
-                                              ledger.nbytes(x), n_)
-        ledger.record("broadcast", ledger.nbytes(x),
-                      hidden=True if ov else None)
-        if backend == "ring":
-            idx = lax.axis_index(ax)
-            masked = jnp.where(idx == root, x, jnp.zeros_like(x))
-            return lax.psum(masked, ax)
-        return mc.broadcast(x, ax, root=root, n_chunks=factor)
+        topo = self._topo()
+        if len(axes) == 1:
+            return self._broadcast_level(x, axes[0], root, topo)
+        rest, prod_rest, r_out, r_rest = self._split_root(axes, root)
+        lead = x.shape[0] if x.ndim else 1
+        if x.ndim >= 1 and prod_rest > 1 and lead % prod_rest == 0:
+            # scatter within the root's inner group, broadcast the
+            # 1/prod(inner) pieces across the outer fabric, allgather
+            # within every inner group: the outer level carries s/prod
+            # per rank instead of the full payload.
+            piece = self.scatter(x, rest, root=r_rest)
+            piece = self._broadcast_level(piece, axes[0], r_out, topo)
+            return self.all_gather(piece, rest)
+        # indivisible payload: per-level root chain (outer first)
+        out = self._broadcast_level(x, axes[0], r_out, topo)
+        return self.broadcast(out, rest, root=r_rest)
 
     def reduce(self, x: jnp.ndarray, axis: AxisSpec,
                root: int = 0) -> jnp.ndarray:
         axes = _axes(axis)
-        if len(axes) != 1:
-            raise NotImplementedError("reduce is single-axis")
-        ax = axes[0]
-        n_ = lax.axis_size(ax)
-        s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("reduce", s, n_)
-        ledger.record("reduce", 2 * s * (n_ - 1) / n_,
-                      hidden=True if ov else None)
-        if backend == "ring":
-            idx = lax.axis_index(ax)
-            total = lax.psum(x, ax)
-            return jnp.where(idx == root, total, jnp.zeros_like(total))
-        return mc.reduce(x, ax, root=root, n_chunks=factor)
+        topo = self._topo()
+        if len(axes) == 1:
+            return self._reduce_level(x, axes[0], root, topo)
+        rest, _, r_out, r_rest = self._split_root(axes, root)
+        # reduce within each inner group first, then across the outer
+        # level: only already-reduced partials cross the slow fabric
+        part = self.reduce(x, rest, root=r_rest)
+        return self._reduce_level(part, axes[0], r_out, topo)
 
     def gather(self, x: jnp.ndarray, axis: AxisSpec,
                root: int = 0) -> jnp.ndarray:
         axes = _axes(axis)
-        if len(axes) != 1:
-            raise NotImplementedError("gather is single-axis")
-        ax = axes[0]
-        n_ = lax.axis_size(ax)
-        s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("gather", s, n_)
-        ledger.record("gather", s * (n_ - 1),
-                      hidden=True if ov else None)
-        if backend == "ring":
-            idx = lax.axis_index(ax)
-            full = lax.all_gather(x, ax, tiled=True)
-            return jnp.where(idx == root, full, jnp.zeros_like(full))
-        return mc.gather(x, ax, root=root, n_chunks=factor)
+        topo = self._topo()
+        if len(axes) == 1:
+            return self._gather_level(x, axes[0], root, topo)
+        rest, _, r_out, r_rest = self._split_root(axes, root)
+        # gather each inner group's block at its local root, then gather
+        # whole blocks across the outer level (rank-major layout)
+        blk = self.gather(x, rest, root=r_rest)
+        return self._gather_level(blk, axes[0], r_out, topo)
 
     def scatter(self, x: jnp.ndarray, axis: AxisSpec,
                 root: int = 0) -> jnp.ndarray:
         axes = _axes(axis)
-        if len(axes) != 1:
-            raise NotImplementedError("scatter is single-axis")
-        ax = axes[0]
-        n_ = lax.axis_size(ax)
-        s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("scatter", s, n_)
-        # root pushes every segment but its own: s*(n-1)/n wire bytes
-        ledger.record("scatter", s * (n_ - 1) / n_,
-                      hidden=True if ov else None)
-        if backend == "ring":
-            n = n_
-            idx = lax.axis_index(ax)
-            rooted = self.broadcast(x, ax, root=root)
-            segs = rooted.reshape((n, x.shape[0] // n) + x.shape[1:])
-            return lax.dynamic_index_in_dim(segs, idx, 0, keepdims=False)
-        return mc.scatter(x, ax, root=root, n_chunks=factor)
+        topo = self._topo()
+        if len(axes) == 1:
+            return self._scatter_level(x, axes[0], root, topo)
+        rest, _, r_out, r_rest = self._split_root(axes, root)
+        # outer scatter moves whole inner-group blocks once across the
+        # slow fabric; the inner levels fan the block out locally
+        blk = self._scatter_level(x, axes[0], r_out, topo)
+        return self.scatter(blk, rest, root=r_rest)
 
 
 def make_communicator(backend: str = "ring", *, slicing_factor: int = 4,
                       allreduce_mode: str = "two_phase",
-                      plan: Optional["Plan"] = None) -> Communicator:
+                      plan: Optional["Plan"] = None,
+                      topology: Optional[topo_mod.Topology] = None
+                      ) -> Communicator:
     return Communicator(backend=backend, slicing_factor=slicing_factor,
-                        allreduce_mode=allreduce_mode, plan=plan)
+                        allreduce_mode=allreduce_mode, plan=plan,
+                        topology=topology)

@@ -65,6 +65,25 @@ class InfiniBandConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ICIConfig:
+    """Intra-node / intra-pod ring interconnect (TPU-ICI-class links).
+
+    Used by ``core.topology`` for the innermost fabric level: collectives
+    there never touch the pool or the NIC, they ride the chip-to-chip
+    ring.  Defaults follow the TPU v5e target below (one usable link per
+    ring direction)."""
+
+    link_bw: float = 50e9                # bytes/s per link direction
+    efficiency: float = 0.95             # protocol framing
+    message_overhead: float = 1e-6       # per-hop issue overhead
+    latency: float = 0.5e-6              # hop latency
+
+    @property
+    def effective_bw(self) -> float:
+        return self.link_bw * self.efficiency
+
+
+@dataclasses.dataclass(frozen=True)
 class TPUConfig:
     """TPU v5e-class target for the dry-run roofline (task spec constants)."""
 
@@ -89,5 +108,6 @@ class CostConfig:
 
 CXL_POOL = CXLPoolConfig()
 INFINIBAND = InfiniBandConfig()
+ICI = ICIConfig()
 TPU_V5E = TPUConfig()
 COST = CostConfig()

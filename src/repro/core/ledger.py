@@ -35,6 +35,10 @@ _EXPOSED: dict = defaultdict(float)
 _HIDDEN: dict = defaultdict(float)
 _COUNTS: dict = defaultdict(int)
 _CALLS: dict = defaultdict(float)   # trip-count-scaled launch count
+# Per-(level axis, fabric) wire bytes: "<axis>/<fabric>" -> kind -> bytes.
+# Populated when the Communicator decomposes against a Topology, so a
+# dry-run can attribute traffic to the fabric that actually carries it.
+_LEVEL_BYTES: dict = defaultdict(lambda: defaultdict(float))
 _MULT: list = [1.0]
 _HIDDEN_CTX: list = [False]
 _CHOICES: list = []   # autotuner decisions, for benchmark audit
@@ -46,6 +50,7 @@ def reset() -> None:
     _HIDDEN.clear()
     _COUNTS.clear()
     _CALLS.clear()
+    _LEVEL_BYTES.clear()
     _MULT[:] = [1.0]
     _HIDDEN_CTX[:] = [False]
     _CHOICES.clear()
@@ -76,25 +81,40 @@ def in_hidden_region() -> bool:
 
 
 def record(kind: str, wire_bytes: float, *,
-           hidden: "bool | None" = None) -> None:
-    """``hidden=None`` defers to the ambient ``ledger.hidden()`` region."""
+           hidden: "bool | None" = None, level: "str | None" = None,
+           fabric: "str | None" = None) -> None:
+    """``hidden=None`` defers to the ambient ``ledger.hidden()`` region.
+    ``level``/``fabric`` attribute the bytes to a topology level (the
+    mesh axis name and the fabric kind that carries the traffic)."""
     h = _HIDDEN_CTX[-1] if hidden is None else hidden
     m = _MULT[-1]
     _BYTES[kind] += wire_bytes * m
     (_HIDDEN if h else _EXPOSED)[kind] += wire_bytes * m
     _COUNTS[kind] += 1
     _CALLS[kind] += m
+    if level is not None:
+        _LEVEL_BYTES[f"{level}/{fabric or '?'}"][kind] += wire_bytes * m
 
 
 def record_choice(primitive: str, msg_bytes: int, nranks: int,
                   backend: str, slicing_factor: int, mode: str,
-                  overlap: bool = False) -> None:
+                  overlap: bool = False, level: "str | None" = None,
+                  fabric: "str | None" = None,
+                  predicted_time: float = 0.0,
+                  baseline_time: float = 0.0) -> None:
     """Audit trail of ``backend='auto'`` decisions (trace time, like
-    ``record``): which concrete (backend, knobs) each collective got."""
+    ``record``): which concrete (backend, knobs) each collective got,
+    which topology level it ran at, and the cost model's predicted /
+    best-fixed-knob times for the cell (what the plan-aware dry-run
+    turns into per-level step-time deltas)."""
     _CHOICES.append({"primitive": primitive, "msg_bytes": int(msg_bytes),
                      "nranks": int(nranks), "backend": backend,
                      "slicing_factor": int(slicing_factor),
-                     "allreduce_mode": mode, "overlap": bool(overlap)})
+                     "allreduce_mode": mode, "overlap": bool(overlap),
+                     "level": level, "fabric": fabric,
+                     "predicted_time": float(predicted_time),
+                     "baseline_time": float(baseline_time),
+                     "calls": float(_MULT[-1])})
 
 
 def snapshot() -> dict:
@@ -106,6 +126,8 @@ def snapshot() -> dict:
             "total_hidden_bytes": float(sum(_HIDDEN.values())),
             "collective_calls": dict(_CALLS),
             "total_collective_calls": float(sum(_CALLS.values())),
+            "level_wire_bytes": {k: dict(v)
+                                 for k, v in _LEVEL_BYTES.items()},
             "auto_choices": list(_CHOICES)}
 
 

@@ -37,6 +37,50 @@ def _ring_perm(n: int, shift: int = 1) -> list[tuple[int, int]]:
     return [(i, (i + shift) % n) for i in range(n)]
 
 
+# --------------------------------------------------------------------- #
+# hierarchical decomposition scaffolds (core.topology)
+#
+# Tuple axes used to recurse the same flat algorithm per level, so the
+# outer (pool-spanning, slow) fabric carried the full payload at every
+# level.  These scaffolds implement the level-decomposed schedules -
+# the per-level single-axis collectives are injected as callables so the
+# Communicator can pick a different backend per fabric level.
+# --------------------------------------------------------------------- #
+
+def hierarchical_all_reduce(x: jnp.ndarray, axes, *, rs_fn, ar_fn,
+                            ag_fn) -> jnp.ndarray:
+    """Level-decomposed AllReduce over ``axes`` (outer level first):
+
+        ReduceScatter innermost..axes[1]  ->  AllReduce over axes[0]
+        on the 1/prod(inner) shard        ->  AllGather back out.
+
+    Each byte crosses the outermost (pool-spanning) fabric once at
+    1/prod(inner) of the payload, instead of the full payload crossing
+    at every level as the flat per-level recursion did.  ``rs_fn`` /
+    ``ar_fn`` / ``ag_fn`` are ``(array, axis_name) -> array`` single-
+    axis collectives (the Communicator's per-level dispatch).
+    """
+    axes = tuple(axes)
+    inner = axes[1:]
+    prod_inner = 1
+    for ax in inner:
+        prod_inner *= lax.axis_size(ax)
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % max(1, prod_inner)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    seg = flat
+    for ax in reversed(inner):      # innermost level first
+        seg = rs_fn(seg, ax)
+    seg = ar_fn(seg, axes[0])       # the only cross-outer traffic
+    for ax in inner:                # inverse order back out
+        seg = ag_fn(seg, ax)
+    if pad:
+        seg = seg[:-pad]
+    return seg.reshape(orig_shape)
+
+
 def _split_chunks(x: jnp.ndarray, n_chunks: int) -> list[jnp.ndarray]:
     """Split along axis 0 (the paper's slicing factor).  Falls back to a
     single chunk when the leading dim does not divide."""

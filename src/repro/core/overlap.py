@@ -188,11 +188,14 @@ def bucketed_sync_grads(grads: Any, specs: Any, pc, dp_axis,
     entries = []
     for i, (g, spec) in enumerate(zip(leaves, spec_leaves)):
         flat_axes = _spec_axes(spec)
+        # dp levels first (outermost), tp innermost - matching
+        # sharding.sync_grads so the fused and per-leaf paths issue the
+        # identical (possibly topology-decomposed) AllReduce
         missing = []
-        if tp is not None and tp not in flat_axes:
-            missing.append(tp)
         if dp and not any(a in flat_axes for a in dp):
             missing.extend(dp)
+        if tp is not None and tp not in flat_axes:
+            missing.append(tp)
         if missing:
             entries.append((i, g.shape, g.dtype, tuple(missing)))
 
@@ -200,8 +203,8 @@ def bucketed_sync_grads(grads: Any, specs: Any, pc, dp_axis,
     for bucket in assign_buckets(entries, bucket_bytes):
         missing = bucket.key[0]
         flat = pack(bucket, leaves)
-        for ax in missing:
-            flat = pc.comm.all_reduce(flat, ax)
+        flat = pc.comm.all_reduce(
+            flat, missing[0] if len(missing) == 1 else tuple(missing))
         for index, leaf in unpack(bucket, flat):
             out[index] = leaf
     return treedef.unflatten(out)

@@ -144,6 +144,49 @@ def has_attention(cfg: ModelConfig) -> bool:
     return any(ch in "ae" for ch in cfg.layer_pattern)
 
 
+def plan_report(ledger_snap: dict) -> dict:
+    """Plan-aware dry-run report (ROADMAP item): condense the auto-plan
+    audit trail (``ledger.snapshot()["auto_choices"]``) into the
+    per-shape backend mix and the predicted step-time delta of the
+    tuned choices vs the best fixed knobs, split per topology level.
+
+    Choice records carry the cost model's predicted/baseline times and
+    the ambient trip-count scale at the call site, so the deltas are
+    per-step (not per-call-site) estimates.  Times are those of the
+    nearest tuned plan cell (log2-bucketed sizes, nearest nranks), so
+    absolute seconds are approximate when a call site falls outside the
+    tuned grid; the delta's sign and per-level split remain exact."""
+    choices = ledger_snap.get("auto_choices") or []
+    by_backend: dict = {}
+    by_prim: dict = {}
+    by_level: dict = {}
+    predicted = baseline = 0.0
+    for ch in choices:
+        calls = float(ch.get("calls", 1.0))
+        key = ch["backend"]
+        by_backend[key] = by_backend.get(key, 0.0) + calls
+        prim = by_prim.setdefault(ch["primitive"], {})
+        prim[key] = prim.get(key, 0.0) + calls
+        lvl = f"{ch.get('level') or 'flat'}/{ch.get('fabric') or '?'}"
+        rec = by_level.setdefault(
+            lvl, {"calls": 0.0, "predicted_s": 0.0, "baseline_s": 0.0})
+        rec["calls"] += calls
+        rec["predicted_s"] += ch.get("predicted_time", 0.0) * calls
+        rec["baseline_s"] += ch.get("baseline_time", 0.0) * calls
+        predicted += ch.get("predicted_time", 0.0) * calls
+        baseline += ch.get("baseline_time", 0.0) * calls
+    for rec in by_level.values():
+        rec["delta_s"] = rec["baseline_s"] - rec["predicted_s"]
+    return {
+        "backend_mix": by_backend,
+        "backend_mix_by_primitive": by_prim,
+        "per_level": by_level,
+        "predicted_comm_s": predicted,
+        "baseline_comm_s": baseline,
+        "predicted_step_delta_s": baseline - predicted,
+    }
+
+
 def decode_window(cfg: ModelConfig, shape_name: str):
     """long_500k uses the sliding-window ring buffer for attention rows
     (SSM rows are O(1) regardless) - see DESIGN.md Arch-applicability."""
@@ -309,6 +352,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, backend: str,
                                                 ("data", "model"))
         else:
             mesh = make_production_mesh(multi_pod=multi_pod)
+        from repro.core.topology import get_active_topology, \
+            warn_uncovered
+        if get_active_topology() is not None:
+            warn_uncovered(get_active_topology(), mesh)
         fn, args, cfg = build_lowerable(arch, shape_name, mesh, backend,
                                         allreduce_mode=allreduce_mode,
                                         bucket_mb=bucket_mb,
@@ -321,6 +368,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, backend: str,
         # AD transposes (the HLO parse below counts scan bodies ONCE -
         # see EXPERIMENTS.md "scan undercount").
         rec["ledger"] = ledger.snapshot()
+        if backend == "auto":
+            rec["plan_report"] = plan_report(rec["ledger"])
         rec["lower_s"] = round(time.time() - t0, 1)
         t1 = time.time()
         compiled = lowered.compile()
@@ -347,6 +396,18 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, backend: str,
         flops = rec["cost"].get("flops", 0.0)
         print(f"  flops/chip: {flops:.3e}  wire bytes/chip: "
               f"{rec['collectives']['total_wire_bytes']:.3e}")
+        lvl_bytes = rec["ledger"].get("level_wire_bytes") or {}
+        for lvl, kinds in sorted(lvl_bytes.items()):
+            print(f"  level {lvl}: {sum(kinds.values()):.3e} "
+                  f"ledger wire bytes")
+        if "plan_report" in rec:
+            pr = rec["plan_report"]
+            print(f"  plan: backend mix {pr['backend_mix']}, predicted "
+                  f"step-time delta vs best fixed "
+                  f"{pr['predicted_step_delta_s']:.3e}s")
+            for lvl, r in sorted(pr["per_level"].items()):
+                print(f"    {lvl}: {r['calls']:.0f} calls, "
+                      f"delta {r['delta_s']:.3e}s")
     except Exception as e:  # noqa: BLE001 - record and continue
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-2000:]
@@ -375,7 +436,12 @@ def main() -> None:
     ap.add_argument("--plan", default=None,
                     help="autotuning plan for --backend auto; the "
                          "per-collective decisions land in the record's "
-                         "ledger.auto_choices")
+                         "ledger.auto_choices and the condensed "
+                         "plan_report")
+    ap.add_argument("--topology", default=None,
+                    help="'axis:fabric,...' spec or topology JSON: "
+                         "decompose tuple-axis collectives per level "
+                         "and split ledger wire bytes per fabric")
     ap.add_argument("--mesh-shape", default=None,
                     help="DPxTP single-pod logical mesh override")
     ap.add_argument("--allreduce-mode", default="two_phase",
@@ -390,6 +456,10 @@ def main() -> None:
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
 
+    if args.topology:
+        from repro.core.topology import parse_topology, \
+            set_active_topology
+        set_active_topology(parse_topology(args.topology))
     if args.plan:
         from repro.core.hw import CXL_POOL, INFINIBAND
         from repro.tuner import activate_plan_file

@@ -40,7 +40,13 @@ def main() -> None:
                     default="ring")
     ap.add_argument("--plan", default=None,
                     help="autotuning plan JSON (see repro.launch.tune); "
-                         "used by --backend auto")
+                         "used by --backend auto; a topology plan also "
+                         "activates hierarchical decomposition")
+    ap.add_argument("--topology", default=None,
+                    help="'axis:fabric,...' spec or topology JSON file: "
+                         "tuple-axis collectives decompose per level "
+                         "(default: the plan's embedded topology, if "
+                         "any)")
     ap.add_argument("--slicing-factor", type=int, default=4)
     ap.add_argument("--allreduce-mode", default="two_phase",
                     choices=["two_phase", "faithful"])
@@ -58,18 +64,33 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
+    from repro.core.topology import (get_active_topology, parse_topology,
+                                     set_active_topology, warn_uncovered)
+    if args.topology:
+        set_active_topology(parse_topology(args.topology))
+    if args.plan:
+        # one shared activation path with dryrun: fingerprint-checks the
+        # plan, activates it process-wide, and activates (or warns about
+        # a mismatch with) its embedded topology
+        from repro.core.hw import CXL_POOL, INFINIBAND
+        from repro.tuner import activate_plan_file
+        activate_plan_file(args.plan, pool=CXL_POOL, ib=INFINIBAND)
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.mesh:
         dp, tp = (int(x) for x in args.mesh.split("x"))
         mesh = jax.make_mesh((dp, tp), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
+    if get_active_topology() is not None:
+        warn_uncovered(get_active_topology(), mesh)
     tcfg = TrainConfig(lr=args.lr, warmup=min(20, args.steps // 5),
                        total_steps=args.steps, backend=args.backend,
                        slicing_factor=args.slicing_factor,
                        allreduce_mode=args.allreduce_mode,
                        microbatches=args.microbatches, clip_norm=None,
-                       plan_path=args.plan, bucket_mb=args.bucket_mb,
+                       # plan already activated process-wide above;
+                       # backend='auto' resolves it via the registry
+                       plan_path=None, bucket_mb=args.bucket_mb,
                        prefetch=args.prefetch)
     step, pspecs, bspecs, pc = make_sharded_train_step(
         cfg, tcfg, mesh, dp_axis=dp_axes(mesh))

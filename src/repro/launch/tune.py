@@ -6,6 +6,21 @@ Usage:
   PYTHONPATH=src python -m repro.launch.tune \
       --primitives all_reduce all_gather --nranks 3 6 12 \
       --sizes-mib 1 16 256 4096 --factors 1 4 16 --out plan.json
+  PYTHONPATH=src python -m repro.launch.tune \
+      --topology "pod:ib,node:cxl,gpu:ici" --out plan.json
+  PYTHONPATH=src python -m repro.launch.tune --topology topo.json \
+      --overlap-from-dryrun experiments/dryrun --out plan.json
+
+``--topology`` accepts the compact ``axis:fabric,...`` string
+(outermost level first) or a JSON file with per-level fabric config
+overrides (see ``core.topology``); the sweep then tunes every level
+against its own fabric and embeds the topology in the plan, so feeding
+the plan to ``--backend auto`` launchers activates hierarchical
+decomposition automatically.  Axis names must match the mesh axes the
+consuming launcher builds (``pod``/``data``/``model`` for the
+production mesh) - the launchers warn when a mesh axis has no level.  ``--overlap-from-dryrun`` derives
+per-primitive overlap windows from dry-run roofline records instead of
+the constant ``--overlap-compute-us`` window.
 
 Without ``--out`` the plan lands in the fingerprint-keyed cache
 (``repro.tuner.default_plan_path``) where ``backend='auto'`` finds it
@@ -16,11 +31,33 @@ from __future__ import annotations
 
 import argparse
 import collections
+import glob
+import json
+import os
 import time
 
 from repro.core.hw import MiB
 from repro.core.schedule import PRIMITIVES
+from repro.core.topology import parse_topology
 from repro import tuner
+
+
+def load_dryrun_records(path: str) -> list:
+    """Load dry-run JSON records from a directory, glob, or file."""
+    if os.path.isdir(path):
+        files = sorted(glob.glob(os.path.join(path, "*.json")))
+    elif any(c in path for c in "*?["):
+        files = sorted(glob.glob(path))
+    else:
+        files = [path]
+    records = []
+    for f in files:
+        try:
+            with open(f) as fh:
+                records.append(json.load(fh))
+        except (OSError, ValueError):
+            continue
+    return records
 
 
 def main() -> None:
@@ -34,11 +71,20 @@ def main() -> None:
     ap.add_argument("--sizes-mib", type=int, nargs="+", default=None)
     ap.add_argument("--nranks", type=int, nargs="+", default=None)
     ap.add_argument("--factors", type=int, nargs="+", default=None)
+    ap.add_argument("--topology", default=None,
+                    help="'axis:fabric,...' spec (outermost first; "
+                         "fabrics: cxl|ib|ici) or a topology JSON file; "
+                         "tunes each level against its own fabric")
     ap.add_argument("--overlap-compute-us", type=float, default=0.0,
                     help="overlappable compute window per collective "
                          "(microseconds); > 0 tunes by exposed time "
                          "max(0, comm - window) and marks cells "
                          "overlap=True")
+    ap.add_argument("--overlap-from-dryrun", default=None,
+                    help="directory/glob of dry-run JSON records; "
+                         "derives per-primitive overlap windows from "
+                         "their roofline + ledger data (replaces the "
+                         "constant --overlap-compute-us window)")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
 
@@ -52,14 +98,28 @@ def main() -> None:
         slicing_factors=tuple(args.factors) if args.factors
         else base.slicing_factors)
 
+    topology = parse_topology(args.topology) if args.topology else None
+
+    overlap = args.overlap_compute_us * 1e-6
+    if args.overlap_from_dryrun:
+        if args.overlap_compute_us:
+            ap.error("--overlap-from-dryrun and --overlap-compute-us "
+                     "are mutually exclusive")
+        records = load_dryrun_records(args.overlap_from_dryrun)
+        overlap = tuner.overlap_windows_from_dryrun(records)
+        got = {p: f"{w * 1e6:.1f}us"
+               for p, w in overlap.per_primitive.items()}
+        print(f"overlap windows from {len(records)} dry-run records: "
+              f"{got}")
+
     progress = None if args.quiet else (lambda msg: print(f"  {msg}"))
     t0 = time.time()
-    plan = tuner.generate_plan(
-        grid, overlap_compute=args.overlap_compute_us * 1e-6,
-        progress=progress)
+    plan = tuner.generate_plan(grid, topology=topology,
+                               overlap_compute=overlap,
+                               progress=progress)
     dt = time.time() - t0
 
-    out = args.out or tuner.default_plan_path()
+    out = args.out or tuner.default_plan_path(topology=topology)
     tuner.save_plan(plan, out)
 
     by_backend = collections.Counter(
@@ -70,6 +130,14 @@ def main() -> None:
           f"-> {out}")
     print(f"  fingerprint {plan.fingerprint}")
     print(f"  choices: {dict(by_backend)}")
+    if topology is not None:
+        for lv in topology.levels:
+            lkey = topology.level_key(lv.axis)
+            mix = collections.Counter(
+                c.backend for k, c in plan.entries.items()
+                if len(k) == 4 and k[3] == lkey)
+            print(f"  level {lv.axis} ({lv.fabric}, "
+                  f"{lv.fingerprint()}): {dict(mix)}")
     if gains:
         print(f"  predicted gain vs best fixed knobs: "
               f"mean {sum(gains) / len(gains):.3f}x, "

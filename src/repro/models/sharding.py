@@ -182,13 +182,17 @@ def sync_grads(grads: Any, specs: Any, pc: ParallelContext,
                 continue
             for a in (s if isinstance(s, tuple) else (s,)):
                 flat_axes.add(a)
+        # dp levels first (outermost), tp innermost: one tuple-axis
+        # AllReduce so the Communicator can decompose hierarchically
+        # against the active topology instead of syncing per level
         missing = []
-        if tp is not None and tp not in flat_axes:
-            missing.append(tp)
         if dp and not any(a in flat_axes for a in dp):
             missing.extend(dp)
-        for ax in missing:
-            g = pc.comm.all_reduce(g, ax)
+        if tp is not None and tp not in flat_axes:
+            missing.append(tp)
+        if missing:
+            g = pc.comm.all_reduce(
+                g, missing[0] if len(missing) == 1 else tuple(missing))
         return g
 
     return tree_map_with_path(fix, grads)

@@ -2,29 +2,40 @@
 
 Offline, ``generate_plan`` sweeps every (primitive, message size, axis
 size, slicing factor, allreduce mode) cell through the pool simulator
-and the IB alpha-beta model and records the predicted-fastest choice.
-Online, ``Communicator(backend="auto")`` consults the persisted plan at
-trace time and the ledger audits every decision taken.
+and the IB alpha-beta model and records the predicted-fastest choice;
+with a ``core.topology.Topology`` the sweep runs once per level, each
+cell keyed by (level, fabric fingerprint) and priced against that
+level's own fabric config.  Online, ``Communicator(backend="auto")``
+consults the persisted plan at trace time and the ledger audits every
+decision taken.
 
-Workflow::
+Workflow (topology axis names must match the mesh axes the launcher
+builds - the launchers warn on uncovered axes)::
 
-    python -m repro.launch.tune --out plan.json     # offline
-    python -m repro.launch.train --backend auto --plan plan.json
+    python -m repro.launch.tune --topology "pod:ib,data:cxl,model:ici" \
+        --out plan.json                             # offline, per level
+    python -m repro.launch.train --backend auto --plan plan.json \
+        --multi-pod
 """
-from repro.tuner.costmodel import (predict_exposed_time, predict_time,
+from repro.tuner.costmodel import (ici_time, predict_exposed_time,
+                                   predict_level_time, predict_time,
                                    roofline_compute_time)
-from repro.tuner.plan import (Choice, Plan, hardware_fingerprint,
-                              load_plan, save_plan, size_bucket)
+from repro.tuner.plan import (Choice, Plan, PlanVersionError,
+                              hardware_fingerprint, load_plan, save_plan,
+                              size_bucket)
 from repro.tuner.runtime import (activate_plan_file, clear_active_plan,
                                  default_plan_path, ensure_default_plan,
                                  get_active_plan, set_active_plan)
 from repro.tuner.sweep import (DEFAULT_GRID, SMOKE_GRID, TuneGrid,
-                               generate_plan)
+                               generate_plan, overlap_windows_from_dryrun)
 
 __all__ = [
-    "Choice", "Plan", "TuneGrid", "DEFAULT_GRID", "SMOKE_GRID",
-    "predict_time", "predict_exposed_time", "roofline_compute_time",
-    "generate_plan", "hardware_fingerprint",
+    "Choice", "Plan", "PlanVersionError", "TuneGrid", "DEFAULT_GRID",
+    "SMOKE_GRID",
+    "predict_time", "predict_exposed_time", "predict_level_time",
+    "ici_time", "roofline_compute_time",
+    "generate_plan", "overlap_windows_from_dryrun",
+    "hardware_fingerprint",
     "size_bucket", "load_plan", "save_plan", "activate_plan_file",
     "clear_active_plan", "default_plan_path", "ensure_default_plan",
     "get_active_plan", "set_active_plan",

@@ -28,10 +28,12 @@ reuses the N->N runs.
 from __future__ import annotations
 
 import functools
+import math
 
 from repro.core import ibmodel, simulator
 from repro.core.hw import (CXL_POOL, INFINIBAND, TPU_V5E, CXLPoolConfig,
-                           InfiniBandConfig)
+                           ICIConfig, InfiniBandConfig)
+from repro.core.topology import Level
 
 
 @functools.lru_cache(maxsize=65536)
@@ -63,6 +65,57 @@ def predict_time(backend: str, primitive: str, nranks: int, msg_bytes: int,
         return _sim_time(primitive, nranks, msg_bytes, slicing_factor,
                          pool)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def ici_time(primitive: str, nranks: int, msg_bytes: int,
+             ici: ICIConfig) -> float:
+    """Ring alpha-beta estimate for an intra-node ICI level.  The ring
+    step structure is fabric-agnostic, so this reuses the calibrated IB
+    formulas with the ICI link constants (no copy-RDMA pipeline, so the
+    per-message overhead is the hop issue cost)."""
+    shim = InfiniBandConfig(link_bw=ici.link_bw,
+                            efficiency=ici.efficiency,
+                            message_overhead=ici.message_overhead,
+                            latency=ici.latency)
+    return ibmodel.estimate(primitive, nranks, msg_bytes, shim).time
+
+
+def predict_level_time(level: Level, primitive: str, nranks: int,
+                       msg_bytes: int, *, backend: str = "ring",
+                       slicing_factor: int = 4,
+                       allreduce_mode: str = "two_phase") -> float:
+    """Predicted completion time of one collective on one topology
+    level, priced against that level's own fabric config:
+
+    * ``cxl`` level - ``backend='cxl'`` runs the pool simulator with the
+      level's ``CXLPoolConfig``; ``backend='ring'`` is the alternative
+      transport (NCCL over the level's IB config), which is what the
+      tuner compares the pool against;
+    * ``ib`` level - ring over the level's ``InfiniBandConfig`` (the
+      pool schedule does not exist where there is no pool);
+    * ``ici`` level - ring over the level's ``ICIConfig``.
+
+    Returns ``inf`` for a backend the fabric cannot execute, so sweeps
+    can enumerate candidates uniformly.
+    """
+    if nranks <= 1:
+        return 0.0
+    if backend not in ("ring", "cxl"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if level.fabric == "cxl":
+        if backend == "ring":
+            return ibmodel.estimate(primitive, nranks, msg_bytes,
+                                    level.ib_cfg).time
+        return predict_time("cxl", primitive, nranks, msg_bytes,
+                            slicing_factor=slicing_factor,
+                            allreduce_mode=allreduce_mode,
+                            pool=level.pool_cfg, ib=level.ib_cfg)
+    if backend != "ring":
+        return math.inf
+    if level.fabric == "ib":
+        return ibmodel.estimate(primitive, nranks, msg_bytes,
+                                level.ib_cfg).time
+    return ici_time(primitive, nranks, msg_bytes, level.ici_cfg)
 
 
 def roofline_compute_time(flops: float, hbm_bytes: float = 0.0, *,

@@ -1,21 +1,29 @@
-"""Autotuning plan: per-(primitive, size-bucket, nranks) backend choice.
+"""Autotuning plan: per-(primitive, size-bucket, nranks[, level]) choice.
 
-A ``Plan`` is the persisted product of an offline sweep through the two
+A ``Plan`` is the persisted product of an offline sweep through the
 cost oracles (``core.simulator`` for the pool backend, ``core.ibmodel``
-for the NCCL-over-IB baseline).  Each entry maps
+for the NCCL-over-IB baseline, the ICI alpha-beta model for intra-node
+rings).  Each entry maps
 
-    (primitive, floor(log2(msg_bytes)), nranks)
+    (primitive, floor(log2(msg_bytes)), nranks[, level])
         -> Choice(backend, slicing_factor, allreduce_mode, ...)
 
 and ``Communicator(backend="auto")`` consults it at trace time (shapes
-are static, so the lookup costs nothing at run time).  Plans are keyed
-by a fingerprint of the hardware model (``CXLPoolConfig`` +
-``InfiniBandConfig``): a plan tuned for one pool must not silently drive
-another.
+are static, so the lookup costs nothing at run time).
+
+Plans are keyed by a hardware fingerprint: for flat plans a hash of
+``CXLPoolConfig`` + ``InfiniBandConfig``; for topology plans (format
+v3) the ``Topology.fingerprint()`` - and every cell additionally
+carries its level key ``"<level index>:<fabric fingerprint>"`` so a
+cell tuned for the rack-scale pool never drives the cross-pod IB
+level.  The topology itself rides in ``meta["topology"]`` so
+``tune -> train`` round-trips through one JSON file.
 
 Lookup is log2-bucketed with nearest-bucket fallback: an unseen message
-size resolves to the closest tuned bucket (ties to the smaller), and an
-unseen rank count to the closest tuned nranks for that primitive.
+size resolves to the closest tuned bucket (ties to the smaller), an
+unseen rank count to the closest tuned nranks for that primitive, and
+a level-keyed lookup falls back to the plan's level-agnostic cells when
+the level is untuned.
 """
 from __future__ import annotations
 
@@ -27,9 +35,17 @@ from typing import Optional
 
 from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
                            InfiniBandConfig)
+from repro.core.topology import Topology
 
-PLAN_VERSION = 2          # v2 adds per-cell overlap fields (v1 loads too)
-_READABLE_VERSIONS = (1, 2)
+PLAN_VERSION = 3          # v3 adds per-(level, fabric) cells + topology
+_READABLE_VERSIONS = (1, 2, 3)
+# v1: flat cells only; v2: + per-cell overlap fields; v3: + level keys.
+# Older formats load forward (missing fields default); unknown formats
+# raise PlanVersionError.
+
+
+class PlanVersionError(ValueError):
+    """A plan JSON uses a format version this build cannot read."""
 
 
 def hardware_fingerprint(pool: CXLPoolConfig = CXL_POOL,
@@ -65,7 +81,7 @@ class Choice:
     hidden_time: float = 0.0
 
 
-PlanKey = tuple  # (primitive, bucket, nranks)
+PlanKey = tuple  # (primitive, bucket, nranks) or (..., level)
 
 
 @dataclasses.dataclass
@@ -75,17 +91,38 @@ class Plan:
     meta: dict = dataclasses.field(default_factory=dict)
 
     def add(self, primitive: str, msg_bytes: int, nranks: int,
-            choice: Choice) -> None:
-        self.entries[(primitive, size_bucket(msg_bytes), nranks)] = choice
+            choice: Choice, level: Optional[str] = None) -> None:
+        key = (primitive, size_bucket(msg_bytes), nranks)
+        if level is not None:
+            key = key + (level,)
+        self.entries[key] = choice
 
     def matches(self, pool: CXLPoolConfig = CXL_POOL,
                 ib: InfiniBandConfig = INFINIBAND) -> bool:
         return self.fingerprint == hardware_fingerprint(pool, ib)
 
-    def lookup(self, primitive: str, msg_bytes: int,
-               nranks: int) -> Optional[Choice]:
-        """Nearest-bucket plan lookup (None if the primitive is untuned)."""
-        keys = [k for k in self.entries if k[0] == primitive]
+    def topology(self) -> Optional[Topology]:
+        """The Topology this plan was tuned for (None for flat plans)."""
+        doc = self.meta.get("topology")
+        return Topology.from_json(doc) if doc else None
+
+    def levels(self) -> tuple:
+        """Distinct level keys appearing in the plan's cells."""
+        return tuple(sorted({k[3] for k in self.entries if len(k) == 4}))
+
+    def lookup(self, primitive: str, msg_bytes: int, nranks: int,
+               level: Optional[str] = None) -> Optional[Choice]:
+        """Nearest-bucket plan lookup (None if the primitive is untuned).
+
+        With ``level``, only cells tuned for that (level index, fabric
+        fingerprint) match; when the level is untuned the lookup falls
+        back to the plan's level-agnostic cells."""
+        keys = [k for k in self.entries
+                if k[0] == primitive and len(k) == 4 and k[3] == level] \
+            if level is not None else []
+        if not keys:
+            keys = [k for k in self.entries
+                    if k[0] == primitive and len(k) == 3]
         if not keys:
             return None
         want_b = size_bucket(max(1, msg_bytes))
@@ -95,30 +132,46 @@ class Plan:
         # ... then the nearest tuned bucket within that nranks.
         best_b = min({k[1] for k in keys if k[2] == best_n},
                      key=lambda b: (abs(b - want_b), b))
-        return self.entries[(primitive, best_b, best_n)]
+        for k in keys:
+            if k[1] == best_b and k[2] == best_n:
+                return self.entries[k]
+        return None
 
     # -- serialization ----------------------------------------------------
 
     def to_json(self) -> dict:
+        entries = []
+        for k, c in sorted(self.entries.items(),
+                           key=lambda kv: (kv[0][0], kv[0][1], kv[0][2],
+                                           kv[0][3] if len(kv[0]) == 4
+                                           else "")):
+            doc = {"primitive": k[0], "bucket": k[1], "nranks": k[2],
+                   **dataclasses.asdict(c)}
+            if len(k) == 4:
+                doc["level"] = k[3]
+            entries.append(doc)
         return {
             "version": PLAN_VERSION,
             "fingerprint": self.fingerprint,
             "meta": self.meta,
-            "entries": [
-                {"primitive": k[0], "bucket": k[1], "nranks": k[2],
-                 **dataclasses.asdict(c)}
-                for k, c in sorted(self.entries.items())],
+            "entries": entries,
         }
 
     @classmethod
     def from_json(cls, doc: dict) -> "Plan":
-        if doc.get("version") not in _READABLE_VERSIONS:
-            raise ValueError(
-                f"unsupported plan version {doc.get('version')!r}")
+        version = doc.get("version")
+        if version not in _READABLE_VERSIONS:
+            raise PlanVersionError(
+                f"unsupported plan format version {version!r}; this "
+                f"build reads versions {_READABLE_VERSIONS} "
+                f"(current: {PLAN_VERSION}) - re-run repro.launch.tune "
+                f"to regenerate the plan")
         plan = cls(fingerprint=doc["fingerprint"],
                    meta=dict(doc.get("meta", {})))
         for e in doc["entries"]:
             key = (e["primitive"], int(e["bucket"]), int(e["nranks"]))
+            if e.get("level") is not None:   # v3 level-keyed cell
+                key = key + (str(e["level"]),)
             plan.entries[key] = Choice(
                 backend=e["backend"],
                 slicing_factor=int(e["slicing_factor"]),
@@ -141,11 +194,29 @@ def save_plan(plan: Plan, path: str) -> None:
 
 
 def load_plan(path: str, *, pool: Optional[CXLPoolConfig] = None,
-              ib: Optional[InfiniBandConfig] = None) -> Plan:
-    """Load a plan; when ``pool``/``ib`` are given, refuse a plan tuned
-    for different hardware."""
+              ib: Optional[InfiniBandConfig] = None,
+              topology: Optional[Topology] = None) -> Plan:
+    """Load a plan; when ``pool``/``ib``/``topology`` are given, refuse a
+    plan tuned for different hardware.  Topology plans carry their own
+    per-level fabric configs, so the flat pool/ib check only applies to
+    flat plans."""
     with open(path) as f:
         plan = Plan.from_json(json.load(f))
+    plan_topo = plan.topology()
+    if topology is not None:
+        want = topology.fingerprint()
+        if plan.fingerprint != want:
+            raise ValueError(
+                f"plan {path} was tuned for topology {plan.fingerprint}, "
+                f"current topology fingerprints to {want}")
+        return plan
+    if plan_topo is not None:
+        if plan.fingerprint != plan_topo.fingerprint():
+            raise ValueError(
+                f"plan {path} is corrupt: fingerprint "
+                f"{plan.fingerprint} does not match its embedded "
+                f"topology ({plan_topo.fingerprint()})")
+        return plan
     if pool is not None or ib is not None:
         want = hardware_fingerprint(pool or CXL_POOL, ib or INFINIBAND)
         if plan.fingerprint != want:

@@ -9,14 +9,23 @@
    (``ensure_default_plan``), generated on first use with the smoke
    grid and cached under ``$REPRO_PLAN_CACHE`` (default
    ``~/.cache/repro/plans``) so later processes just load it.
+
+Topology plans (format v3) are fingerprinted by the topology, and
+``activate_plan_file`` also activates the embedded topology
+(``core.topology.set_active_topology``) so every Communicator in the
+process decomposes tuple axes against the levels the plan was tuned
+for - one ``--plan`` flag wires up the whole tune -> train workflow.
 """
 from __future__ import annotations
 
 import os
+import warnings
 from typing import Optional
 
 from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
                            InfiniBandConfig)
+from repro.core.topology import (Topology, get_active_topology,
+                                 set_active_topology)
 from repro.tuner.plan import (Plan, hardware_fingerprint, load_plan,
                               save_plan)
 from repro.tuner.sweep import SMOKE_GRID, TuneGrid, generate_plan
@@ -38,9 +47,24 @@ def clear_active_plan() -> None:
 
 def activate_plan_file(path: str, *,
                        pool: Optional[CXLPoolConfig] = None,
-                       ib: Optional[InfiniBandConfig] = None) -> Plan:
-    plan = load_plan(path, pool=pool, ib=ib)
+                       ib: Optional[InfiniBandConfig] = None,
+                       topology: Optional[Topology] = None) -> Plan:
+    plan = load_plan(path, pool=pool, ib=ib, topology=topology)
     set_active_plan(plan)
+    topo = plan.topology()
+    if topo is not None:
+        # An explicitly activated topology wins over the plan's embedded
+        # one, but a mismatch means the plan's level keys will never
+        # resolve - surface that instead of silently ringing everything.
+        current = get_active_topology()
+        if current is None:
+            set_active_topology(topo)
+        elif current.fingerprint() != topo.fingerprint():
+            warnings.warn(
+                f"active topology ({current.fingerprint()}) differs "
+                f"from the one plan {path} was tuned for "
+                f"({topo.fingerprint()}); its level-keyed cells will "
+                f"not resolve and collectives fall back to ring")
     return plan
 
 
@@ -53,28 +77,32 @@ def plan_cache_dir() -> str:
 
 
 def default_plan_path(pool: CXLPoolConfig = CXL_POOL,
-                      ib: InfiniBandConfig = INFINIBAND) -> str:
-    return os.path.join(plan_cache_dir(),
-                        f"plan_{hardware_fingerprint(pool, ib)}.json")
+                      ib: InfiniBandConfig = INFINIBAND,
+                      topology: Optional[Topology] = None) -> str:
+    fp = topology.fingerprint() if topology is not None else \
+        hardware_fingerprint(pool, ib)
+    return os.path.join(plan_cache_dir(), f"plan_{fp}.json")
 
 
 def ensure_default_plan(pool: CXLPoolConfig = CXL_POOL,
                         ib: InfiniBandConfig = INFINIBAND,
-                        grid: TuneGrid = SMOKE_GRID) -> Plan:
+                        grid: TuneGrid = SMOKE_GRID,
+                        topology: Optional[Topology] = None) -> Plan:
     """Return the active plan, loading or generating+persisting the
-    fingerprint-keyed default when none is set."""
+    fingerprint-keyed default when none is set.  With a topology the
+    default plan is tuned per level against each level's own fabric."""
     active = get_active_plan()
     if active is not None:
         return active
-    path = default_plan_path(pool, ib)
+    path = default_plan_path(pool, ib, topology=topology)
     if os.path.exists(path):
         try:
-            plan = load_plan(path, pool=pool, ib=ib)
+            plan = load_plan(path, pool=pool, ib=ib, topology=topology)
             set_active_plan(plan)
             return plan
         except (ValueError, OSError, KeyError):
             pass  # stale/corrupt cache: regenerate below
-    plan = generate_plan(grid, pool=pool, ib=ib)
+    plan = generate_plan(grid, pool=pool, ib=ib, topology=topology)
     try:
         save_plan(plan, path)
     except OSError:

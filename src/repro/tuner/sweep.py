@@ -8,6 +8,11 @@ stored alongside, so benchmarks can report regret: by construction the
 chosen time is never worse than that baseline as long as the grid
 contains the default slicing factor.
 
+With a ``core.topology.Topology`` the sweep runs once per level: cells
+are keyed by (level index, fabric fingerprint), priced against that
+level's own fabric oracle, and the candidate set shrinks to what the
+fabric can execute (the pool schedule only exists on ``cxl`` levels).
+
 ``overlap_compute`` turns the sweep overlap-aware: every candidate
 (including the fixed baselines, so the regret guarantee survives) is
 priced by its *exposed* time ``max(0, comm - overlappable_compute)``
@@ -27,9 +32,10 @@ import math
 from typing import Callable, Optional, Union
 
 from repro.core import mesh_collectives as mc
-from repro.core.hw import (CXL_POOL, INFINIBAND, MiB, CXLPoolConfig,
-                           InfiniBandConfig)
+from repro.core.hw import (CXL_POOL, INFINIBAND, TPU_V5E, MiB,
+                           CXLPoolConfig, InfiniBandConfig)
 from repro.core.schedule import PRIMITIVES
+from repro.core.topology import Topology
 from repro.tuner import costmodel
 from repro.tuner.plan import Choice, Plan, hardware_fingerprint
 
@@ -55,8 +61,11 @@ SMOKE_GRID = TuneGrid(sizes=tuple(m * MiB for m in (1, 16, 256)),
                       nranks=(2, 3), slicing_factors=(1, 4))
 
 
-def _candidates(primitive: str, grid: TuneGrid):
-    yield ("ring", mc.DEFAULT_CHUNKS, "two_phase")
+def _candidates(primitive: str, grid: TuneGrid, backends=("ring", "cxl")):
+    if "ring" in backends:
+        yield ("ring", mc.DEFAULT_CHUNKS, "two_phase")
+    if "cxl" not in backends:
+        return
     modes = grid.allreduce_modes if primitive == "all_reduce" \
         else ("two_phase",)
     for f, m in itertools.product(grid.slicing_factors, modes):
@@ -66,48 +75,145 @@ def _candidates(primitive: str, grid: TuneGrid):
 OverlapCompute = Union[float, Callable[[str, int, int], float], None]
 
 
+def _tune_cell(prim: str, n: int, size: int, window: float,
+               candidates, cost_fn) -> Choice:
+    """Argmin over candidates under the (possibly overlap-windowed)
+    objective; the best *fixed-knob* alternative rides along so
+    benchmarks can report regret."""
+    best: Optional[Choice] = None
+    fixed_best = math.inf
+    for backend, factor, mode in candidates:
+        t_wire = cost_fn(backend, prim, n, size, factor, mode)
+        # objective: exposed time under the overlap window (== t_wire
+        # when no window); the window applies to every candidate, fixed
+        # baselines included, so the never-slower-than-fixed guarantee
+        # is preserved.
+        t = max(0.0, t_wire - window)
+        if backend == "ring" or (factor == mc.DEFAULT_CHUNKS
+                                 and mode == "two_phase"):
+            fixed_best = min(fixed_best, t)
+        if best is None or t < best.predicted_time:
+            best = Choice(backend=backend, slicing_factor=factor,
+                          allreduce_mode=mode, predicted_time=t,
+                          overlap=window > 0.0,
+                          hidden_time=min(t_wire, window))
+    return dataclasses.replace(best, baseline_time=fixed_best)
+
+
+def _window(overlap_compute: OverlapCompute, prim: str, size: int,
+            n: int) -> float:
+    if callable(overlap_compute):
+        return max(0.0, overlap_compute(prim, size, n))
+    return max(0.0, float(overlap_compute or 0.0))
+
+
 def generate_plan(grid: TuneGrid = DEFAULT_GRID, *,
                   pool: CXLPoolConfig = CXL_POOL,
                   ib: InfiniBandConfig = INFINIBAND,
+                  topology: Optional[Topology] = None,
                   overlap_compute: OverlapCompute = None,
                   progress: Optional[Callable[[str], None]] = None) -> Plan:
+    """Sweep the grid into a Plan.
+
+    Without a topology every cell is priced against the single global
+    (pool, ib) pair - the flat two-backend regime.  With a topology the
+    sweep runs once per level: each cell is keyed by
+    (level index, fabric fingerprint) and priced against that level's
+    own fabric config (``costmodel.predict_level_time``), with the
+    candidate set restricted to the backends the fabric can execute.
+    The topology is embedded in the plan metadata and its fingerprint
+    becomes the plan fingerprint, so ``tune -> train`` round-trips
+    through one JSON file.
+    """
     overlap_meta = ("per-cell" if callable(overlap_compute)
                     else float(overlap_compute or 0.0))
-    plan = Plan(fingerprint=hardware_fingerprint(pool, ib),
+    if topology is None:
+        plan = Plan(fingerprint=hardware_fingerprint(pool, ib),
+                    meta={"grid": dataclasses.asdict(grid),
+                          "overlap_compute_s": overlap_meta})
+
+        def cost(backend, prim, n, size, factor, mode):
+            return costmodel.predict_time(
+                backend, prim, n, size, slicing_factor=factor,
+                allreduce_mode=mode, pool=pool, ib=ib)
+
+        for prim in grid.primitives:
+            for n in grid.nranks:
+                for size in grid.sizes:
+                    w = _window(overlap_compute, prim, size, n)
+                    plan.add(prim, size, n, _tune_cell(
+                        prim, n, size, w, _candidates(prim, grid), cost))
+                if progress:
+                    progress(f"tuned {prim} nranks={n}")
+        return plan
+
+    plan = Plan(fingerprint=topology.fingerprint(),
                 meta={"grid": dataclasses.asdict(grid),
-                      "overlap_compute_s": overlap_meta})
-    for prim in grid.primitives:
-        for n in grid.nranks:
-            for size in grid.sizes:
-                window = 0.0
-                if callable(overlap_compute):
-                    window = max(0.0, overlap_compute(prim, size, n))
-                elif overlap_compute:
-                    window = max(0.0, float(overlap_compute))
-                best: Optional[Choice] = None
-                fixed_best = math.inf
-                for backend, factor, mode in _candidates(prim, grid):
-                    t_wire = costmodel.predict_time(
-                        backend, prim, n, size, slicing_factor=factor,
-                        allreduce_mode=mode, pool=pool, ib=ib)
-                    # objective: exposed time under the overlap window
-                    # (== t_wire when no window); the window applies to
-                    # every candidate, fixed baselines included, so the
-                    # never-slower-than-fixed guarantee is preserved.
-                    t = max(0.0, t_wire - window)
-                    if backend == "ring" or (
-                            factor == mc.DEFAULT_CHUNKS
-                            and mode == "two_phase"):
-                        fixed_best = min(fixed_best, t)
-                    if best is None or t < best.predicted_time:
-                        best = Choice(backend=backend,
-                                      slicing_factor=factor,
-                                      allreduce_mode=mode,
-                                      predicted_time=t,
-                                      overlap=window > 0.0,
-                                      hidden_time=min(t_wire, window))
-                best = dataclasses.replace(best, baseline_time=fixed_best)
-                plan.add(prim, size, n, best)
-            if progress:
-                progress(f"tuned {prim} nranks={n}")
+                      "overlap_compute_s": overlap_meta,
+                      "topology": topology.to_json()})
+    for level in topology.levels:
+        lkey = topology.level_key(level.axis)
+
+        def cost(backend, prim, n, size, factor, mode, _lv=level):
+            return costmodel.predict_level_time(
+                _lv, prim, n, size, backend=backend,
+                slicing_factor=factor, allreduce_mode=mode)
+
+        for prim in grid.primitives:
+            for n in grid.nranks:
+                for size in grid.sizes:
+                    w = _window(overlap_compute, prim, size, n)
+                    plan.add(prim, size, n, _tune_cell(
+                        prim, n, size, w,
+                        _candidates(prim, grid, level.backends()), cost),
+                        level=lkey)
+                if progress:
+                    progress(f"tuned {prim} nranks={n} "
+                             f"level={level.axis}/{level.fabric}")
     return plan
+
+
+def overlap_windows_from_dryrun(records: list, *,
+                                peak_flops: float = TPU_V5E.peak_flops_bf16,
+                                hbm_bw: float = TPU_V5E.hbm_bw
+                                ) -> Callable[[str, int, int], float]:
+    """Derive per-cell overlap windows from dry-run roofline records
+    (ROADMAP overlap follow-up: replace the constant window).
+
+    Each dry-run record carries the compiled step's FLOPs / HBM bytes
+    (``cost_analysis``) and the trace-time ledger (per-primitive wire
+    bytes and true launch counts).  The roofline residency of the step
+    is apportioned to primitives by their wire-byte share and divided
+    by that primitive's launch count: the result is the average compute
+    window one launch of that primitive can hide behind.  Returns a
+    ``(primitive, msg_bytes, nranks) -> seconds`` callable for
+    ``generate_plan(overlap_compute=...)``.
+    """
+    tot_window: dict = {}
+    tot_n: dict = {}
+    for rec in records:
+        if rec.get("status") != "ok":
+            continue
+        cost = rec.get("cost") or {}
+        led = rec.get("ledger") or {}
+        compute = costmodel.roofline_compute_time(
+            float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            peak_flops=peak_flops, hbm_bw=hbm_bw)
+        wire = led.get("wire_bytes") or {}
+        calls = led.get("collective_calls") or {}
+        total_bytes = sum(wire.values())
+        if compute <= 0.0 or total_bytes <= 0.0:
+            continue
+        for prim, b in wire.items():
+            n_calls = max(1.0, float(calls.get(prim, 1.0)))
+            w = compute * (b / total_bytes) / n_calls
+            tot_window[prim] = tot_window.get(prim, 0.0) + w
+            tot_n[prim] = tot_n.get(prim, 0) + 1
+    windows = {p: tot_window[p] / tot_n[p] for p in tot_window}
+
+    def window(primitive: str, msg_bytes: int, nranks: int) -> float:
+        return windows.get(primitive, 0.0)
+
+    window.per_primitive = windows  # introspectable for reports/tests
+    return window

@@ -307,6 +307,118 @@ def check_train_equivalence(backend: str, arch: str) -> None:
           f"(loss {float(m_sh['loss']):.4f}, worst dp {worst:.1e})")
 
 
+def check_topology_hierarchical() -> None:
+    """Acceptance: a 3-level ("pod", "node", "gpu") topology with
+    distinct per-level fabric configs round-trips through
+    tune -> save -> load -> Communicator(backend='auto'), the plan cells
+    carry (level, fabric fingerprint) keys, the ledger splits wire bytes
+    per level/fabric, and the hierarchical decomposition matches the
+    flat single-axis reference: bitwise for fp32 (integer-valued data,
+    so cross-order summation is exact) under ring, allclose for cxl and
+    bf16.  Uneven level sizes (2x4, 4x2) are covered too."""
+    import tempfile
+
+    from repro import tuner
+    from repro.core import ledger
+    from repro.core.hw import CXLPoolConfig, ICIConfig, InfiniBandConfig
+    from repro.core.topology import Level, Topology
+
+    rng = np.random.default_rng(42)
+    topo = Topology(levels=(
+        Level("pod", "ib", ib=InfiniBandConfig(link_bw=12.5e9)),
+        Level("node", "cxl", pool=CXLPoolConfig(device_bw=18e9)),
+        Level("gpu", "ici", ici=ICIConfig(link_bw=45e9)),
+    ))
+    grid = tuner.TuneGrid(sizes=(256, 4096, 65536), nranks=(2, 4, 8),
+                          slicing_factors=(1, 4))
+    plan = tuner.generate_plan(grid, topology=topo)
+    # round-trip through disk, exactly as tune -> train would
+    with tempfile.TemporaryDirectory() as td:
+        path = td + "/topo_plan.json"
+        tuner.save_plan(plan, path)
+        plan = tuner.load_plan(path, topology=topo)
+    assert plan.topology().fingerprint() == topo.fingerprint()
+    lkeys = plan.levels()
+    assert len(lkeys) == 3, lkeys
+    for i, lv in enumerate(topo.levels):
+        assert topo.level_key(lv.axis) in lkeys, (lv.axis, lkeys)
+        assert topo.level_key(lv.axis).startswith(f"{i}:")
+    # distinct fabrics -> distinct fingerprints
+    assert len({k.split(":")[1] for k in lkeys}) == 3
+
+    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "node", "gpu"))
+    mesh1 = jax.make_mesh((8,), ("x",))
+    axes3 = ("pod", "node", "gpu")
+    xi = rng.integers(-8, 8, (64, 5)).astype(np.float32)
+
+    def run(mesh, spec, comm_fn, x):
+        return np.asarray(jax.jit(jax.shard_map(
+            comm_fn, mesh=mesh, in_specs=P(spec), out_specs=P(spec),
+            check_vma=False))(x))
+
+    for backend in ("ring", "cxl", "auto"):
+        comm = Communicator(backend=backend, plan=plan, topology=topo)
+        flat = Communicator(backend=backend, plan=plan)
+        ledger.reset()
+        ar3 = run(mesh3, axes3, lambda a: comm.all_reduce(a, axes3), xi)
+        snap = ledger.snapshot()
+        # hierarchical AR decomposes into per-level RS/AR/AG and the
+        # ledger attributes every byte to its level/fabric; the outer
+        # (pod-spanning) fabric carries 1/prod(inner) of the payload
+        lvl = {k: sum(v.values())
+               for k, v in snap["level_wire_bytes"].items()}
+        assert set(lvl) == {"pod/ib", "node/cxl", "gpu/ici"}, lvl
+        assert lvl["pod/ib"] < lvl["gpu/ici"], lvl
+        if backend == "auto":
+            audit = snap["auto_choices"]
+            assert {a["level"] for a in audit} == set(axes3)
+            assert {a["fabric"] for a in audit} == {"ib", "cxl", "ici"}
+            # the pool schedule only exists on the cxl level
+            for a in audit:
+                if a["fabric"] != "cxl":
+                    assert a["backend"] == "ring", a
+        ar1 = run(mesh1, "x", lambda a: flat.all_reduce(a, "x"), xi)
+        assert np.array_equal(ar3, ar1), backend
+        ag3 = run(mesh3, axes3, lambda a: comm.all_gather(a, axes3), xi)
+        ag1 = run(mesh1, "x", lambda a: flat.all_gather(a, "x"), xi)
+        assert np.array_equal(ag3, ag1), backend
+        bc3 = run(mesh3, axes3,
+                  lambda a: comm.broadcast(a, axes3, root=5), xi)
+        bc1 = run(mesh1, "x",
+                  lambda a: flat.broadcast(a, "x", root=5), xi)
+        assert np.array_equal(bc3, bc1), backend
+        rs3 = run(mesh3, axes3,
+                  lambda a: comm.reduce_scatter(a, axes3), xi)
+        rs1 = run(mesh1, "x", lambda a: flat.reduce_scatter(a, "x"), xi)
+        assert np.array_equal(rs3, rs1), backend
+        # bf16: same decomposition, allclose band
+        xb = jnp.asarray(xi + 0.25 * rng.standard_normal(xi.shape),
+                         jnp.bfloat16)
+        arb3 = run(mesh3, axes3, lambda a: comm.all_reduce(a, axes3), xb)
+        arb1 = run(mesh1, "x", lambda a: flat.all_reduce(a, "x"), xb)
+        np.testing.assert_allclose(
+            np.asarray(arb3, np.float32), np.asarray(arb1, np.float32),
+            rtol=3e-2, atol=3e-1, err_msg=backend)
+    # uneven level sizes: 2x4 and 4x2 two-level topologies
+    topo_pn = Topology(levels=topo.levels[:2])
+    for shape in ((2, 4), (4, 2)):
+        mesh2 = jax.make_mesh(shape, ("pod", "node"))
+        for backend in ("ring", "cxl"):
+            comm = Communicator(backend=backend, topology=topo_pn)
+            flat = Communicator(backend=backend)
+            a2 = run(mesh2, ("pod", "node"),
+                     lambda a: comm.all_reduce(a, ("pod", "node")), xi)
+            a1 = run(mesh1, "x", lambda a: flat.all_reduce(a, "x"), xi)
+            assert np.array_equal(a2, a1), (shape, backend)
+            b2 = run(mesh2, ("pod", "node"),
+                     lambda a: comm.broadcast(a, ("pod", "node"),
+                                              root=5), xi)
+            b1 = run(mesh1, "x",
+                     lambda a: flat.broadcast(a, "x", root=5), xi)
+            assert np.array_equal(b2, b1), (shape, backend)
+    print("  topology-hierarchical ok")
+
+
 def check_ledger_vs_hlo():
     """For an unscanned program the trace-time ledger and the compiled-HLO
     parse must agree on collective wire bytes (the scan undercount is the
@@ -343,6 +455,7 @@ if __name__ == "__main__":
         slicing_factors=(1, 4))))
 
     check_ledger_vs_hlo()
+    check_topology_hierarchical()
     # ring/cxl draw from the module RNG in the original order (the
     # chaotic train-equivalence checks below are sensitive to the global
     # draw sequence); the added checks use a detached stream.
