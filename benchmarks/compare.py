@@ -1,0 +1,186 @@
+"""CI perf-regression gate: compare a benchmark JSON against the
+committed baseline and fail when any gated metric regresses beyond
+tolerance.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/compare.py \
+      --baseline benchmarks/baselines/bench-smoke.json \
+      --current bench-smoke.json [--tolerance 0.1]
+
+Both files are ``benchmarks/run.py --json`` outputs.  Metrics are
+classified by name:
+
+* ``*_wall_s`` and other wall-clock metrics are machine-dependent:
+  reported, never gated;
+* higher-is-better metrics (``*speedup*``, ``*gain*``, ``*ratio*``,
+  ``*coverage*``, ``*fraction*``) regress when the current value drops
+  more than ``tolerance`` below baseline;
+* lower-is-better metrics (``*regret*``, ``*_us``, ``*_bytes*``,
+  ``*wrong*``, ``*step*``, ``*calls*``) regress when the current value
+  rises more than ``tolerance`` above baseline;
+* everything else is informational (printed, not gated) - a metric
+  must opt in to a direction by its name.
+
+A zero baseline makes relative deltas degenerate (+inf for any
+nonzero current value), so zero-baseline lower-is-better metrics gate
+on an *absolute* slack instead: ``ZERO_SLACK`` maps name patterns to
+the absolute rise allowed from a 0 baseline (e.g. a converged regret
+of 0 µs may drift up to 25 µs - measurement-noise scale - before the
+gate trips; counters like ``*wrong*`` stay strict at 0).
+
+A metric present in the baseline but missing from the current run is a
+failure too (coverage regressions should not pass silently).  The
+delta table is printed and, when ``$GITHUB_STEP_SUMMARY`` is set,
+appended to the job summary as markdown.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+WALL = ("_wall_s",)
+# first match wins across both lists, HIGHER checked first
+HIGHER = ("speedup", "gain", "ratio", "coverage", "fraction",
+          "measured_cells")
+LOWER = ("regret", "_us", "_bytes", "wrong", "step", "calls", "epochs")
+# plain "*_cells" counts (e.g. topology_plan_cells) are grid-size
+# constants: informational, gated by neither list
+# Absolute rise allowed above a 0.0 baseline (relative deltas are
+# degenerate there), first matching pattern wins; unlisted names are
+# strict (any rise from 0 fails).
+ZERO_SLACK = (("_us", 25.0),)
+
+
+def zero_slack(name: str) -> float:
+    for pat, slack in ZERO_SLACK:
+        if pat in name:
+            return slack
+    return 0.0
+
+
+def direction(name: str) -> str:
+    """'higher' | 'lower' | 'info' for a metric name."""
+    if any(name.endswith(w) for w in WALL):
+        return "info"
+    if any(h in name for h in HIGHER):
+        return "higher"
+    if any(lo in name for lo in LOWER):
+        return "lower"
+    return "info"
+
+
+def load_records(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    recs = doc["records"] if isinstance(doc, dict) else doc
+    out = {}
+    for r in recs:
+        v = r["value"]
+        if isinstance(v, (int, float)) and math.isfinite(v):
+            out[r["name"]] = float(v)
+    return out
+
+
+def compare(baseline: dict, current: dict, tolerance: float) -> tuple:
+    """Returns (rows, failures): one row per metric
+    (name, base, cur, delta_frac, direction, status)."""
+    rows = []
+    failures = []
+    for name in sorted(baseline):
+        base = baseline[name]
+        d = direction(name)
+        if name not in current:
+            if d != "info":
+                failures.append(f"{name}: missing from current run "
+                                f"(baseline {base:.4g})")
+                rows.append((name, base, None, None, d, "MISSING"))
+            continue
+        cur = current[name]
+        status = "ok"
+        if base:
+            delta = (cur - base) / abs(base)
+            if d == "higher" and delta < -tolerance:
+                status = "REGRESSED"
+                failures.append(
+                    f"{name}: {base:.4g} -> {cur:.4g} "
+                    f"({delta * 100:+.1f}%, higher is better)")
+            elif d == "lower" and delta > tolerance:
+                status = "REGRESSED"
+                failures.append(
+                    f"{name}: {base:.4g} -> {cur:.4g} "
+                    f"({delta * 100:+.1f}%, lower is better)")
+        else:
+            # zero baseline: relative deltas degenerate, gate on the
+            # absolute slack instead
+            delta = None
+            if d == "lower" and cur > zero_slack(name):
+                status = "REGRESSED"
+                failures.append(
+                    f"{name}: 0 -> {cur:.4g} (baseline is 0; allowed "
+                    f"absolute rise {zero_slack(name):.4g})")
+        rows.append((name, base, cur, delta, d, status))
+    for name in sorted(set(current) - set(baseline)):
+        rows.append((name, None, current[name], None,
+                     direction(name), "new"))
+    return rows, failures
+
+
+def render(rows: list, tolerance: float) -> str:
+    lines = ["| metric | baseline | current | delta | gate | status |",
+             "|---|---:|---:|---:|---|---|"]
+    for name, base, cur, delta, d, status in rows:
+        fb = f"{base:.4g}" if base is not None else "-"
+        fc = f"{cur:.4g}" if cur is not None else "-"
+        fd = f"{delta * 100:+.1f}%" if delta is not None else "-"
+        gate = {"higher": f">= -{tolerance:.0%}",
+                "lower": f"<= +{tolerance:.0%}"}.get(d, "info")
+        mark = {"REGRESSED": "**REGRESSED**",
+                "MISSING": "**MISSING**"}.get(status, status)
+        lines.append(f"| {name} | {fb} | {fc} | {fd} | {gate} | "
+                     f"{mark} |")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional regression per metric")
+    args = ap.parse_args()
+
+    baseline = load_records(args.baseline)
+    current = load_records(args.current)
+    rows, failures = compare(baseline, current, args.tolerance)
+    table = render(rows, args.tolerance)
+    gated = sum(r[4] in ("higher", "lower") and r[5] != "new"
+                for r in rows)
+    print(table)
+    print(f"\n{gated} gated metrics vs {args.baseline} "
+          f"(tolerance {args.tolerance:.0%}); "
+          f"{len(failures)} regression(s)")
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("## Benchmark smoke vs baseline\n\n")
+            f.write(table + "\n\n")
+            if failures:
+                f.write("**Regressions:**\n\n")
+                for msg in failures:
+                    f.write(f"- {msg}\n")
+
+    if failures:
+        print("\nPERF REGRESSION GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print("perf gate ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,8 @@ Prints ``name,value,notes`` CSV.  Modules:
   overlap  - bucketed+prefetched FSDP step vs per-leaf serialized
   topology - hierarchical decomposition vs flat per-level recursion on
              a 3-level (pod/node/gpu) multi-fabric topology
+  retune   - online re-tuning convergence under a 4x mis-calibrated
+             pool oracle (measured-cost feedback + plan hot-swap)
 
 ``--smoke`` runs the fast CI path: coarse-grid plan generation + the
 autotune and overlap audits (exercises the whole tuner + overlap stack
@@ -25,7 +27,7 @@ import time
 
 from benchmarks import (autotune, fig3_characterization, fig9_collectives,
                         fig10_scalability, fig11_chunks, llm_case_study,
-                        overlap, topology)
+                        overlap, retune, topology)
 
 MODULES = [
     ("fig3", fig3_characterization),
@@ -36,9 +38,10 @@ MODULES = [
     ("autotune", autotune),
     ("overlap", overlap),
     ("topology", topology),
+    ("retune", retune),
 ]
 
-SMOKE_MODULES = ("fig3", "autotune", "overlap", "topology")
+SMOKE_MODULES = ("fig3", "autotune", "overlap", "topology", "retune")
 
 
 def main() -> None:

@@ -115,9 +115,18 @@ class Communicator:
             return (self.backend, self.slicing_factor,
                     self.allreduce_mode, False)
         plan = self.plan
+        epoch = None
         if plan is None:
+            # Resolve against the epoch-versioned registry: a hot-swap
+            # (tuner.online) replaces the active plan between steps and
+            # the next trace picks the new one up here, with the epoch
+            # stamped into the audit so runs can attribute every
+            # decision to the plan generation that made it.
             from repro.tuner import runtime as tuner_runtime
-            plan = tuner_runtime.ensure_default_plan(topology=topo)
+            plan, epoch = tuner_runtime.get_active_plan_versioned()
+            if plan is None:
+                plan = tuner_runtime.ensure_default_plan(topology=topo)
+                epoch = tuner_runtime.plan_epoch()
         level = topo.level_for(ax) if (topo is not None and ax) else None
         lkey = topo.level_key(ax) if level is not None else None
         ch = plan.lookup(primitive, msg_bytes, n, level=lkey)
@@ -129,7 +138,15 @@ class Communicator:
             backend, factor, mode, overlap = (
                 ch.backend, ch.slicing_factor, ch.allreduce_mode,
                 ch.overlap)
-            pred, base = ch.predicted_time, ch.baseline_time
+            # measured-over-oracle: a refined (v4) plan cell's measured
+            # EWMA is a better per-launch estimate than the oracle, so
+            # the audit (and everything downstream of it: step-time
+            # apportioning, dry-run deltas) prices with it - gated by
+            # the sample threshold the refreshing tuner recorded, so a
+            # below-threshold sample persisted for warm-start does not
+            # override the oracle here
+            ms = (plan.meta.get("online") or {}).get("min_samples", 1)
+            pred, base = ch.effective_time(ms), ch.baseline_time
         if level is not None and backend not in level.backends():
             # a flat (level-agnostic) cell can resolve under a topology
             # via the lookup fallback, but the pool schedule does not
@@ -139,7 +156,7 @@ class Communicator:
             primitive, msg_bytes, n, backend, factor, mode,
             overlap=overlap, level=ax if level is not None else None,
             fabric=level.fabric if level is not None else None,
-            predicted_time=pred, baseline_time=base)
+            predicted_time=pred, baseline_time=base, plan_epoch=epoch)
         return backend, factor, mode, overlap
 
     def _rec(self, kind: str, wire: float, ov: bool,

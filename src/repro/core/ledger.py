@@ -24,10 +24,20 @@ scheduled behind compute - while everything else books as *exposed*.
 ``counts`` is the number of distinct collective call *sites*;
 ``collective_calls`` additionally multiplies by the ambient scale, i.e.
 the true number of collectives launched per step.
+
+Timing capture (online re-tuning): unlike everything above, wall times
+are a *run-time* signal.  ``record_timing`` (or the ``timed`` context
+manager around an eagerly dispatched collective) books one measured
+sample tagged with the full plan-cell identity - primitive, message
+size, nranks, the (backend, slicing_factor, allreduce_mode) actually
+taken, and the topology level/fabric - and ``timing_cells`` aggregates
+the samples per cell key so ``tuner.online`` can fold them back into
+the plan as a measured cost.
 """
 from __future__ import annotations
 
 import contextlib
+import time
 from collections import defaultdict
 
 _BYTES: dict = defaultdict(float)
@@ -42,6 +52,7 @@ _LEVEL_BYTES: dict = defaultdict(lambda: defaultdict(float))
 _MULT: list = [1.0]
 _HIDDEN_CTX: list = [False]
 _CHOICES: list = []   # autotuner decisions, for benchmark audit
+_TIMINGS: list = []   # measured wall-time samples (online re-tuning)
 
 
 def reset() -> None:
@@ -54,6 +65,7 @@ def reset() -> None:
     _MULT[:] = [1.0]
     _HIDDEN_CTX[:] = [False]
     _CHOICES.clear()
+    _TIMINGS.clear()
 
 
 @contextlib.contextmanager
@@ -101,12 +113,16 @@ def record_choice(primitive: str, msg_bytes: int, nranks: int,
                   overlap: bool = False, level: "str | None" = None,
                   fabric: "str | None" = None,
                   predicted_time: float = 0.0,
-                  baseline_time: float = 0.0) -> None:
+                  baseline_time: float = 0.0,
+                  plan_epoch: "int | None" = None) -> None:
     """Audit trail of ``backend='auto'`` decisions (trace time, like
     ``record``): which concrete (backend, knobs) each collective got,
     which topology level it ran at, and the cost model's predicted /
     best-fixed-knob times for the cell (what the plan-aware dry-run
-    turns into per-level step-time deltas)."""
+    turns into per-level step-time deltas).  ``plan_epoch`` is the
+    version of the active-plan registry the decision was resolved
+    against (None for an explicitly attached plan), so hot-swap runs
+    can tell which plan generation drove each call."""
     _CHOICES.append({"primitive": primitive, "msg_bytes": int(msg_bytes),
                      "nranks": int(nranks), "backend": backend,
                      "slicing_factor": int(slicing_factor),
@@ -114,7 +130,73 @@ def record_choice(primitive: str, msg_bytes: int, nranks: int,
                      "level": level, "fabric": fabric,
                      "predicted_time": float(predicted_time),
                      "baseline_time": float(baseline_time),
+                     "plan_epoch": plan_epoch,
                      "calls": float(_MULT[-1])})
+
+
+# -- measured wall-time capture (online re-tuning) -------------------------
+
+def record_timing(primitive: str, msg_bytes: int, nranks: int,
+                  backend: str, seconds: float, *,
+                  slicing_factor: int = 4,
+                  allreduce_mode: str = "two_phase",
+                  level: "str | None" = None,
+                  fabric: "str | None" = None) -> None:
+    """Book one measured wall-time sample for a dispatched collective,
+    tagged with everything ``tuner.online`` needs to aggregate it into
+    a plan cell: the cell identity (primitive, size, nranks, level) and
+    the candidate actually executed (backend + knobs)."""
+    _TIMINGS.append({"primitive": primitive, "msg_bytes": int(msg_bytes),
+                     "nranks": int(nranks), "backend": backend,
+                     "slicing_factor": int(slicing_factor),
+                     "allreduce_mode": allreduce_mode,
+                     "level": level, "fabric": fabric,
+                     "seconds": float(seconds)})
+
+
+@contextlib.contextmanager
+def timed(primitive: str, msg_bytes: int, nranks: int, backend: str, *,
+          slicing_factor: int = 4, allreduce_mode: str = "two_phase",
+          level: "str | None" = None, fabric: "str | None" = None):
+    """Time an eagerly executed region and book it as one sample.  The
+    caller is responsible for making the region synchronous (e.g.
+    ``jax.block_until_ready`` on the collective's result) - the ledger
+    only measures wall time between entry and exit."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        record_timing(primitive, msg_bytes, nranks, backend,
+                      time.perf_counter() - t0,
+                      slicing_factor=slicing_factor,
+                      allreduce_mode=allreduce_mode,
+                      level=level, fabric=fabric)
+
+
+def timing_cells() -> dict:
+    """Diagnostic aggregation of the timing samples, keyed per
+    (plan cell, executed candidate): ``"<primitive>/b<log2 bucket>/
+    n<nranks>[/<level>]@<backend>:<factor>:<allreduce mode>"``
+    -> sample count + total/mean seconds.  The candidate key carries
+    the full knob tuple so two modes of the same backend never pool
+    into one mean.  This is a snapshot *readout* (dry-runs,
+    debugging); ``tuner.online`` consumes the raw
+    ``snapshot()["timings"]`` list, which keeps per-sample order for
+    the EWMA."""
+    cells: dict = {}
+    for t in _TIMINGS:
+        bucket = max(1, int(t["msg_bytes"])).bit_length() - 1
+        key = f"{t['primitive']}/b{bucket}/n{t['nranks']}"
+        if t.get("level") is not None:
+            key += f"/{t['level']}"
+        key += f"@{t['backend']}:{t.get('slicing_factor', 4)}" \
+               f":{t.get('allreduce_mode', 'two_phase')}"
+        c = cells.setdefault(key, {"samples": 0, "seconds_total": 0.0,
+                                   "backend": t["backend"]})
+        c["samples"] += 1
+        c["seconds_total"] += t["seconds"]
+        c["mean_seconds"] = c["seconds_total"] / c["samples"]
+    return cells
 
 
 def snapshot() -> dict:
@@ -128,7 +210,9 @@ def snapshot() -> dict:
             "total_collective_calls": float(sum(_CALLS.values())),
             "level_wire_bytes": {k: dict(v)
                                  for k, v in _LEVEL_BYTES.items()},
-            "auto_choices": list(_CHOICES)}
+            "auto_choices": list(_CHOICES),
+            "timings": list(_TIMINGS),
+            "timing_cells": timing_cells()}
 
 
 def nbytes(x) -> int:

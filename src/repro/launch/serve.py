@@ -32,9 +32,28 @@ def main() -> None:
                          "switches the engine's Communicator to "
                          "backend='auto' (takes effect when serving "
                          "sharded, i.e. with a tp>1 ParallelContext)")
+    ap.add_argument("--online-retune", action="store_true",
+                    help="treat every generate round as a step: fold "
+                         "its measured wall time back into the plan "
+                         "and hot-swap at --retune-interval round "
+                         "boundaries; requires --plan (and, like "
+                         "--plan itself, only folds measurements when "
+                         "serving sharded: an unsharded tp=1 engine "
+                         "issues no collectives to measure)")
+    ap.add_argument("--retune-interval", type=int, default=4,
+                    help="generate rounds between plan refresh + "
+                         "hot-swap under --online-retune")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="number of generate rounds (default 1; "
+                         "2 x retune-interval under --online-retune)")
+    ap.add_argument("--plan-out", default=None,
+                    help="persist the measurement-refined plan "
+                         "(format v4) here at the end of the run")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-step", type=int, default=None)
     args = ap.parse_args()
+    if args.online_retune and not args.plan:
+        ap.error("--online-retune requires --plan")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = model.init_params(jax.random.key(0), cfg, tp=1,
@@ -45,10 +64,11 @@ def main() -> None:
         params = checkpoint.restore(args.ckpt, step,
                                     {"params": params})["params"]
         print(f"restored {args.ckpt} step {step}")
-    eng = ServeEngine(cfg, params, ServeConfig(
+    scfg = ServeConfig(
         max_seq=args.prompt_len + args.new_tokens + 8,
         window=args.window, temperature=args.temperature,
-        plan_path=args.plan))
+        plan_path=args.plan)
+    eng = ServeEngine(cfg, params, scfg)
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(rng.integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)))}
@@ -60,11 +80,62 @@ def main() -> None:
         batch["source"] = jnp.asarray(rng.standard_normal(
             (args.batch, cfg.encoder.source_len, cfg.frontend_dim)),
             jnp.float32)
-    t0 = time.time()
-    out = eng.generate(batch, max_new_tokens=args.new_tokens)
-    dt = time.time() - t0
-    print(f"{cfg.name}: {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
+    online = None
+    if args.online_retune:
+        import dataclasses as _dc
+
+        from repro import tuner
+        from repro.core import ledger
+        from repro.core.hw import CXL_POOL, INFINIBAND
+        online = tuner.OnlineTuner(
+            tuner.load_plan(args.plan, pool=CXL_POOL, ib=INFINIBAND),
+            retune_interval=args.retune_interval)
+        # the refreshed plan lives in a file so rebuilt engines load it
+        live_path = args.plan_out or (args.plan + ".refined.json")
+    rounds = args.rounds if args.rounds is not None else (
+        2 * args.retune_interval if args.online_retune else 1)
+    out = None
+    if online is not None:
+        ledger.reset()
+    profile = None   # trace-time auto_choices of the compiled engine
+    for r in range(rounds):
+        t0 = time.time()
+        out = eng.generate(batch, max_new_tokens=args.new_tokens)
+        dt = time.time() - t0
+        print(f"{cfg.name}: {out.shape} in {dt:.2f}s "
+              f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
+        if online is None:
+            continue
+        if profile is None:
+            # the engine traced during this round: its audit is the
+            # per-round collective profile cached rounds rerun (the
+            # round's wall time includes compilation, so skip it)
+            profile = ledger.snapshot()["auto_choices"]
+            if not profile:
+                print("[serve] --online-retune: the engine issued no "
+                      "auto collectives (unsharded tp=1 engines have "
+                      "nothing to measure) - rounds will run but the "
+                      "plan cannot change")
+        else:
+            online.observe_step(dt, profile)
+        prev = online.plan
+        refreshed = online.maybe_retune(r)
+        if refreshed is not None:
+            tuner.save_plan(refreshed, live_path)
+            if tuner.choices_changed(prev, refreshed):
+                # hot-swap between rounds: rebuild the engine against
+                # the refreshed plan (its jitted prefill/decode must
+                # re-trace to pick up the new resolution)
+                eng = ServeEngine(cfg, params, _dc.replace(
+                    scfg, plan_path=live_path))
+                ledger.reset()
+                profile = None
+                print(f"round {r}: plan hot-swap -> {live_path}")
+    if online is not None and args.plan_out:
+        refined = online.refresh()
+        from repro.tuner import save_plan
+        save_plan(refined, args.plan_out)
+        print(f"saved refined plan (v4) -> {args.plan_out}")
     print(out[: min(2, args.batch)].tolist())
 
 

@@ -9,6 +9,9 @@ Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
       --mesh 2x4 --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --smoke --backend auto --plan plan.json --online-retune \
+      --retune-interval 10 --plan-out refined.json
 """
 from __future__ import annotations
 
@@ -47,6 +50,17 @@ def main() -> None:
                          "tuple-axis collectives decompose per level "
                          "(default: the plan's embedded topology, if "
                          "any)")
+    ap.add_argument("--online-retune", action="store_true",
+                    help="feed measured step times back into the plan "
+                         "(per-cell EWMA, tuner.online) and hot-swap "
+                         "the refreshed plan between steps; requires "
+                         "--backend auto")
+    ap.add_argument("--retune-interval", type=int, default=10,
+                    help="steps between plan refresh + hot-swap "
+                         "under --online-retune")
+    ap.add_argument("--plan-out", default=None,
+                    help="persist the measurement-refined plan "
+                         "(format v4) here at the end of the run")
     ap.add_argument("--slicing-factor", type=int, default=4)
     ap.add_argument("--allreduce-mode", default="two_phase",
                     choices=["two_phase", "faithful"])
@@ -63,6 +77,8 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
+    if args.online_retune and args.backend != "auto":
+        ap.error("--online-retune requires --backend auto")
 
     from repro.core.topology import (get_active_topology, parse_topology,
                                      set_active_topology, warn_uncovered)
@@ -92,6 +108,8 @@ def main() -> None:
                        # backend='auto' resolves it via the registry
                        plan_path=None, bucket_mb=args.bucket_mb,
                        prefetch=args.prefetch)
+    from repro.core import ledger
+    ledger.reset()
     step, pspecs, bspecs, pc = make_sharded_train_step(
         cfg, tcfg, mesh, dp_axis=dp_axes(mesh))
     tp = mesh.shape["model"]
@@ -99,15 +117,59 @@ def main() -> None:
                                dtype=jnp.float32)
     opt = adamw_init(params)
     data = iter(SyntheticTokens(cfg, batch=args.batch, seq=args.seq))
+
+    online = None
+    if args.online_retune:
+        from repro import tuner
+        base = tuner.ensure_default_plan(
+            topology=get_active_topology())
+        online = tuner.OnlineTuner(
+            base, retune_interval=args.retune_interval)
+        print(f"online re-tuning: interval {args.retune_interval} "
+              f"steps, plan epoch {tuner.plan_epoch()}")
+
     print(f"training {cfg.name} on mesh {dict(mesh.shape)} "
           f"backend={args.backend}")
     t0 = time.time()
+    profile = None       # trace-time auto_choices of the compiled step
     for i, batch in zip(range(args.steps), data):
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        ts = time.perf_counter()
         params, opt, metrics = step(params, opt, batch)
+        if online is not None:
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - ts
+            if profile is None:
+                # the step traced during this call: its audit is the
+                # per-step collective profile every later step reruns
+                profile = ledger.snapshot()["auto_choices"]
+            else:
+                # skip the compile step's wall time; every cached step
+                # apportions its measured time over the profile
+                online.observe_step(dt, profile)
+            prev = online.plan
+            refreshed = online.maybe_retune(i)
+            if refreshed is not None and \
+                    tuner.choices_changed(prev, refreshed):
+                # hot-swap: the registry already serves the refreshed
+                # plan (epoch bumped); re-trace the step so auto
+                # resolution picks it up at the next step boundary
+                ledger.reset()
+                profile = None
+                step, pspecs, bspecs, pc = make_sharded_train_step(
+                    cfg, tcfg, mesh, dp_axis=dp_axes(mesh))
+                print(f"step {i:5d} plan hot-swap -> epoch "
+                      f"{tuner.plan_epoch()} (choices changed)")
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
                   f"({time.time() - t0:.1f}s)")
+    if online is not None and args.plan_out:
+        from repro.tuner import save_plan
+        refined = online.refresh()
+        save_plan(refined, args.plan_out)
+        measured = sum(st.samples > 0 for st in online.stats.values())
+        print(f"saved refined plan (v4, {len(refined.entries)} cells, "
+              f"{measured} measured candidates) -> {args.plan_out}")
     if args.ckpt:
         checkpoint.save(args.ckpt, args.steps, {"params": params})
         print(f"saved {args.ckpt}/step_{args.steps:08d}")

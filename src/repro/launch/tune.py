@@ -10,6 +10,8 @@ Usage:
       --topology "pod:ib,node:cxl,gpu:ici" --out plan.json
   PYTHONPATH=src python -m repro.launch.tune --topology topo.json \
       --overlap-from-dryrun experiments/dryrun --out plan.json
+  PYTHONPATH=src python -m repro.launch.tune \
+      --measurements experiments/timings --out plan.json   # v4 fold
 
 ``--topology`` accepts the compact ``axis:fabric,...`` string
 (outermost level first) or a JSON file with per-level fabric config
@@ -85,6 +87,14 @@ def main() -> None:
                          "derives per-primitive overlap windows from "
                          "their roofline + ledger data (replaces the "
                          "constant --overlap-compute-us window)")
+    ap.add_argument("--measurements", default=None,
+                    help="directory/glob/file of ledger timing records "
+                         "(snapshot()['timings'], e.g. a train run's "
+                         "--plan-out sidecar or a persisted snapshot); "
+                         "folds the measured per-cell wall times into "
+                         "the swept plan (tuner.online), emitting a "
+                         "format-v4 plan whose measured cells override "
+                         "the oracle")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
 
@@ -117,6 +127,22 @@ def main() -> None:
     plan = tuner.generate_plan(grid, topology=topology,
                                overlap_compute=overlap,
                                progress=progress)
+    if args.measurements:
+        timings = []
+        for rec in load_dryrun_records(args.measurements):
+            # accept either a bare timing list or any record carrying a
+            # ledger snapshot (top-level or under "ledger")
+            if isinstance(rec, list):
+                timings.extend(rec)
+            elif isinstance(rec, dict):
+                timings.extend(rec.get("timings")
+                               or (rec.get("ledger") or {}).get(
+                                   "timings") or [])
+        plan = tuner.fold_measurements(plan, timings)
+        measured = sum(c.sample_count > 0
+                       for c in plan.entries.values())
+        print(f"folded {len(timings)} measured samples into "
+              f"{measured} cells")
     dt = time.time() - t0
 
     out = args.out or tuner.default_plan_path(topology=topology)

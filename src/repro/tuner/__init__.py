@@ -15,17 +15,27 @@ builds - the launchers warn on uncovered axes)::
     python -m repro.launch.tune --topology "pod:ib,data:cxl,model:ici" \
         --out plan.json                             # offline, per level
     python -m repro.launch.train --backend auto --plan plan.json \
-        --multi-pod
+        --multi-pod --online-retune --plan-out refined.json
+
+With ``--online-retune`` the launcher measures step wall times, folds
+them into the plan as per-cell EWMAs (``tuner.online``), and hot-swaps
+the refreshed plan through the epoch-versioned active-plan registry at
+``--retune-interval`` boundaries; ``--plan-out`` persists the refined
+(format v4) plan for the next run.
 """
 from repro.tuner.costmodel import (ici_time, predict_exposed_time,
                                    predict_level_time, predict_time,
                                    roofline_compute_time)
+from repro.tuner.online import (OnlineTuner, choices_changed,
+                                fold_measurements)
 from repro.tuner.plan import (Choice, Plan, PlanVersionError,
                               hardware_fingerprint, load_plan, save_plan,
                               size_bucket)
 from repro.tuner.runtime import (activate_plan_file, clear_active_plan,
                                  default_plan_path, ensure_default_plan,
-                                 get_active_plan, set_active_plan)
+                                 get_active_plan,
+                                 get_active_plan_versioned, plan_epoch,
+                                 set_active_plan)
 from repro.tuner.sweep import (DEFAULT_GRID, SMOKE_GRID, TuneGrid,
                                generate_plan, overlap_windows_from_dryrun)
 
@@ -38,5 +48,7 @@ __all__ = [
     "hardware_fingerprint",
     "size_bucket", "load_plan", "save_plan", "activate_plan_file",
     "clear_active_plan", "default_plan_path", "ensure_default_plan",
-    "get_active_plan", "set_active_plan",
+    "get_active_plan", "get_active_plan_versioned", "plan_epoch",
+    "set_active_plan",
+    "OnlineTuner", "choices_changed", "fold_measurements",
 ]

@@ -1,0 +1,425 @@
+"""Online re-tuning: measured-cost feedback into the plan.
+
+The offline plans (``tuner.sweep``) are priced entirely by oracles -
+the pool simulator, the IB alpha-beta model, the ICI ring model - so a
+miscalibrated oracle silently drives ``backend='auto'`` to the wrong
+choice forever.  This module closes the loop:
+
+1. **Observe**: measured per-collective wall times arrive either as
+   ledger-tagged timing samples (``core.ledger.record_timing`` /
+   ``ledger.timed`` around an eagerly dispatched collective) or as
+   measured *step* times apportioned over the step's trace-time
+   ``auto_choices`` audit by predicted-time share
+   (``OnlineTuner.observe_step`` - the ROADMAP's "feed measured step
+   times back into the plan").  Samples aggregate per plan cell key
+   ``(primitive, size bucket, nranks[, level])`` *and* per candidate
+   ``(backend, slicing_factor, allreduce_mode)`` as an
+   exponentially-weighted moving average.
+
+2. **Refresh**: ``OnlineTuner.refresh`` re-resolves every cell of the
+   base plan: each candidate is priced by its measured EWMA once the
+   cell has ``min_samples`` samples for it, and by the offline oracle
+   otherwise.  The argmin becomes the new cell choice, with the
+   measured feedback persisted in the plan (format v4:
+   ``measured_us``/``sample_count``/``ewma_alpha``), so a saved
+   refreshed plan warm-starts the next run's tuner.
+
+3. **Hot-swap**: ``refresh_and_activate`` publishes the refreshed plan
+   through the epoch-versioned active-plan registry
+   (``tuner.runtime.set_active_plan``).  ``Communicator`` resolution
+   happens per call against the registry, so the next trace of the
+   step picks the new plan up; launchers re-trace at retune boundaries
+   only when ``choices_changed`` says the resolution actually moved.
+
+Convergence mechanics: a 4x-optimistic pool oracle makes ``auto`` pick
+``cxl`` where ``ring`` truly wins.  The wrongly-chosen backend is what
+gets executed, so it is what gets *measured*; once its measured EWMA
+overrides the oracle, the argmin compares (bad) measured cxl against
+(oracle) ring and flips.  The newly chosen backend then gets measured
+in turn and either confirms or flips back - the same
+explore-by-exploitation loop Meta's 100k+-GPU collective tuning runs
+with continuously refreshed cost tables (``benchmarks/retune.py``
+demonstrates bounded-step convergence).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
+                           InfiniBandConfig)
+from repro.tuner import costmodel
+from repro.tuner.plan import Choice, Plan, size_bucket
+from repro.tuner.sweep import DEFAULT_GRID, TuneGrid, _candidates
+
+DEFAULT_ALPHA = 0.3         # EWMA smoothing factor
+DEFAULT_MIN_SAMPLES = 3     # samples before measured overrides oracle
+DEFAULT_RETUNE_INTERVAL = 10
+_LKEY_RE = re.compile(r"\d+:[0-9a-f]+")   # "<idx>:<fabric fp>"
+
+
+def cell_key(primitive: str, msg_bytes: int, nranks: int,
+             level: Optional[str] = None) -> tuple:
+    """The plan-cell identity a measurement aggregates into - exactly
+    the key ``Plan.add`` builds."""
+    key = (primitive, size_bucket(max(1, int(msg_bytes))), int(nranks))
+    return key + (level,) if level is not None else key
+
+
+@dataclasses.dataclass
+class CellStats:
+    """EWMA of measured wall time for one (cell, candidate)."""
+
+    ewma_seconds: float = 0.0
+    samples: int = 0
+
+    def update(self, seconds: float, alpha: float) -> None:
+        if self.samples == 0:
+            self.ewma_seconds = seconds
+        else:
+            self.ewma_seconds = (alpha * seconds
+                                 + (1.0 - alpha) * self.ewma_seconds)
+        self.samples += 1
+
+
+def _grid_from_meta(meta: dict) -> TuneGrid:
+    g = meta.get("grid")
+    if not g:
+        return DEFAULT_GRID
+    return TuneGrid(
+        primitives=tuple(g.get("primitives", DEFAULT_GRID.primitives)),
+        sizes=tuple(g.get("sizes", DEFAULT_GRID.sizes)),
+        nranks=tuple(g.get("nranks", DEFAULT_GRID.nranks)),
+        slicing_factors=tuple(g.get("slicing_factors",
+                                    DEFAULT_GRID.slicing_factors)),
+        allreduce_modes=tuple(g.get("allreduce_modes",
+                                    DEFAULT_GRID.allreduce_modes)))
+
+
+class OnlineTuner:
+    """Accumulates measured collective times and folds them back into
+    a plan.  One instance per training/serving run; the base plan's
+    persisted ``measured_us`` cells warm-start the EWMAs, so a
+    ``tune -> train --plan-out -> train`` chain keeps learning.
+
+    ``pool``/``ib`` are the *oracle* configs unmeasured candidates are
+    priced with at refresh time - deliberately the same (possibly
+    miscalibrated) oracle the base plan was tuned with: measurements
+    are the only source of truth the online layer adds.
+    """
+
+    def __init__(self, plan: Plan, *, alpha: float = DEFAULT_ALPHA,
+                 min_samples: int = DEFAULT_MIN_SAMPLES,
+                 retune_interval: int = DEFAULT_RETUNE_INTERVAL,
+                 pool: CXLPoolConfig = CXL_POOL,
+                 ib: InfiniBandConfig = INFINIBAND):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"ewma alpha must be in (0, 1], got {alpha}")
+        if retune_interval < 1:
+            raise ValueError("retune_interval must be >= 1")
+        self.plan = plan
+        self.alpha = float(alpha)
+        self.min_samples = max(1, int(min_samples))
+        self.retune_interval = int(retune_interval)
+        self.pool = pool
+        self.ib = ib
+        self.grid = _grid_from_meta(plan.meta)
+        # The plan's embedded topology, else the process-wide active
+        # one: a *flat* plan driven under `--topology` still audits
+        # level tags by axis name, and feedback keyed by an unmappable
+        # axis name would land in cells runtime lookup never queries.
+        self.topology = plan.topology()
+        if self.topology is None:
+            from repro.core.topology import get_active_topology
+            self.topology = get_active_topology()
+        # level key "idx:fp" -> Level, and axis name -> level key, so
+        # observations may tag either spelling
+        self._levels = {}
+        self._axis_lkey = {}
+        if self.topology is not None:
+            for lv in self.topology.levels:
+                lkey = self.topology.level_key(lv.axis)
+                self._levels[lkey] = lv
+                self._axis_lkey[lv.axis] = lkey
+        # Overlap objective of the base plan: a constant window is
+        # reconstructable from the meta and re-applied at refresh so
+        # re-resolution competes under the same exposed-time objective
+        # the sweep used; per-cell (dry-run-derived) windows are not
+        # serialized, so unmeasured cells then keep their offline
+        # choice instead of being re-argmin'd under the wrong
+        # objective.
+        w = plan.meta.get("overlap_compute_s", 0.0)
+        self.overlap_window = float(w) if not isinstance(w, str) else 0.0
+        self.window_unknown = isinstance(w, str)     # "per-cell"
+        # (cell key, (backend, factor, mode)) -> CellStats
+        self.stats: dict = {}
+        self.refresh_count = 0
+        for key, ch in plan.entries.items():
+            if ch.sample_count > 0 and ch.measured_us > 0.0:
+                cand = (ch.backend, ch.slicing_factor, ch.allreduce_mode)
+                self.stats[(key, cand)] = CellStats(
+                    ewma_seconds=ch.measured_us * 1e-6,
+                    samples=ch.sample_count)
+
+    # -- observation ------------------------------------------------------
+
+    def _lkey(self, level: Optional[str]) -> Optional[str]:
+        if level is None:
+            return None
+        if level in self._axis_lkey:       # topology axis name
+            return self._axis_lkey[level]
+        if level in self._levels:          # already a level key
+            return level
+        if _LKEY_RE.fullmatch(level):
+            # a raw "<idx>:<fabric fp>" key from a persisted record
+            # whose topology this tuner does not know: keep it verbatim
+            return level
+        # an axis name with no topology in scope: cells keyed by it
+        # would be unreachable at lookup time - aggregate level-
+        # agnostically instead of silently dropping the sample
+        return None
+
+    def observe(self, primitive: str, msg_bytes: int, nranks: int,
+                backend: str, seconds: float, *,
+                slicing_factor: int = 4,
+                allreduce_mode: str = "two_phase",
+                level: Optional[str] = None) -> None:
+        """Fold one measured wall-time sample into the per-cell EWMA.
+        ``level`` accepts either the topology axis name (what the
+        ledger tags) or the plan's ``"<idx>:<fabric fp>"`` level key."""
+        if nranks <= 1 or seconds < 0.0:
+            return
+        key = cell_key(primitive, msg_bytes, nranks, self._lkey(level))
+        cand = (backend, int(slicing_factor), allreduce_mode)
+        st = self.stats.setdefault((key, cand), CellStats())
+        st.update(float(seconds), self.alpha)
+
+    def observe_timings(self, timings: list) -> int:
+        """Consume ledger timing samples (``snapshot()["timings"]`` or
+        a persisted copy).  Returns the number of samples folded in."""
+        n = 0
+        for t in timings:
+            self.observe(t["primitive"], t["msg_bytes"], t["nranks"],
+                         t["backend"], t["seconds"],
+                         slicing_factor=t.get("slicing_factor", 4),
+                         allreduce_mode=t.get("allreduce_mode",
+                                              "two_phase"),
+                         level=t.get("level"))
+            n += 1
+        return n
+
+    def observe_step(self, step_seconds: float, choices: list) -> int:
+        """Apportion one measured step wall time over the step's
+        trace-time ``auto_choices`` audit by predicted-time share.
+
+        Each audited choice carries the oracle's ``predicted_time`` and
+        its true per-step launch count ``calls``; the step's measured
+        time is split across cells proportionally to
+        ``predicted_time * calls`` and divided back by ``calls`` to
+        yield a per-launch sample (assuming a communication-dominated
+        step).
+
+        Scope of this signal: one scalar per step can only rescale the
+        oracle's per-cell predictions by a common factor - it corrects
+        *overall* drift (e.g. every collective running 2x slower than
+        modeled, from fabric contention) and detects that the plan's
+        predictions no longer match reality, but it cannot re-rank
+        candidates *within* a cell, because each cell's apportioned
+        sample inherits the oracle's own relative weights.  Correcting
+        a non-uniformly mis-calibrated oracle (the pool model wrong,
+        the IB model right) requires per-collective samples:
+        ``ledger.record_timing`` / ``ledger.timed`` around eagerly
+        dispatched collectives, or folded offline from profiler traces
+        via ``tune --measurements`` - the path ``benchmarks/retune.py``
+        demonstrates converging."""
+        total = sum(max(0.0, c.get("predicted_time", 0.0))
+                    * max(1.0, c.get("calls", 1.0)) for c in choices)
+        if step_seconds <= 0.0 or total <= 0.0:
+            return 0
+        n = 0
+        for c in choices:
+            pred = max(0.0, c.get("predicted_time", 0.0))
+            calls = max(1.0, c.get("calls", 1.0))
+            if pred <= 0.0:
+                continue
+            per_launch = step_seconds * (pred * calls / total) / calls
+            self.observe(c["primitive"], c["msg_bytes"], c["nranks"],
+                         c["backend"], per_launch,
+                         slicing_factor=c.get("slicing_factor", 4),
+                         allreduce_mode=c.get("allreduce_mode",
+                                              "two_phase"),
+                         level=c.get("level"))
+            n += 1
+        return n
+
+    # -- repricing --------------------------------------------------------
+
+    def _oracle_time(self, key: tuple, backend: str, factor: int,
+                     mode: str) -> float:
+        prim, bucket, nranks = key[0], key[1], key[2]
+        size = 1 << bucket
+        if len(key) == 4 and key[3] in self._levels:
+            return costmodel.predict_level_time(
+                self._levels[key[3]], prim, nranks, size,
+                backend=backend, slicing_factor=factor,
+                allreduce_mode=mode)
+        return costmodel.predict_time(
+            backend, prim, nranks, size, slicing_factor=factor,
+            allreduce_mode=mode, pool=self.pool, ib=self.ib)
+
+    def cost(self, key: tuple, backend: str, factor: int,
+             mode: str) -> tuple:
+        """(cost seconds, stats or None) of one candidate for one cell:
+        the measured EWMA once ``min_samples`` samples landed for that
+        exact candidate, the offline oracle otherwise - windowed by the
+        base plan's constant overlap objective, so oracle-priced
+        candidates compete on the same exposed-time terms the sweep
+        tuned with (measured wall times are already exposure)."""
+        st = self.stats.get((key, (backend, factor, mode)))
+        if st is not None and st.samples >= self.min_samples:
+            return st.ewma_seconds, st
+        t = self._oracle_time(key, backend, factor, mode)
+        return max(0.0, t - self.overlap_window), st
+
+    def _measured_keys(self) -> set:
+        """Cell keys with at least one candidate past min_samples."""
+        return {k for (k, _c), st in self.stats.items()
+                if st.samples >= self.min_samples}
+
+    def refresh(self) -> Plan:
+        """Re-resolve every cell of the base plan - plus every cell the
+        workload was actually *measured* at - under measured-over-
+        oracle costing; returns a new format-v4 plan (the base plan is
+        untouched).
+
+        Growing cells at the observed size buckets matters: the tuned
+        grid rarely matches the workload's message sizes exactly, and
+        runtime lookup falls back to the nearest tuned bucket.  Once a
+        measured cell exists at the workload's own bucket, lookup
+        resolves it exactly and the measured cost - not a neighboring
+        bucket's oracle guess - drives the choice."""
+        self.refresh_count += 1
+        meta = dict(self.plan.meta)
+        measured_cells = sum(
+            1 for (key, cand), st in self.stats.items()
+            if st.samples >= self.min_samples)
+        meta["online"] = {"ewma_alpha": self.alpha,
+                          "min_samples": self.min_samples,
+                          "refresh_count": self.refresh_count,
+                          "measured_candidates": measured_cells}
+        out = Plan(fingerprint=self.plan.fingerprint, meta=meta)
+        measured_keys = self._measured_keys()
+        keys = set(self.plan.entries)
+        keys.update(key for key, _cand in self.stats)
+        for key in sorted(keys, key=lambda k: (k[0], k[1], k[2],
+                                               k[3] if len(k) == 4
+                                               else "")):
+            lkey = key[3] if len(key) == 4 else None
+            base_ch = self.plan.entries.get(key)
+            if base_ch is None:
+                # measured-only cell: inherit baseline/overlap context
+                # from the nearest tuned cell (what lookup served the
+                # workload from before this cell existed)
+                base_ch = self.plan.lookup(key[0], 1 << key[1], key[2],
+                                           level=lkey)
+            if base_ch is None:      # untuned primitive: ring context
+                base_ch = Choice(backend="ring")
+            if self.window_unknown and key not in measured_keys:
+                # tuned under per-cell overlap windows this tuner
+                # cannot reconstruct: without measurements there is no
+                # basis to overturn the offline choice
+                out.entries[key] = base_ch
+                continue
+            level = self._levels.get(lkey) if lkey is not None else None
+            backends = level.backends() if level is not None \
+                else ("ring", "cxl")
+            best = None
+            best_cost = None
+            best_st = None
+            for backend, factor, mode in _candidates(
+                    key[0], self.grid, backends):
+                t, st = self.cost(key, backend, factor, mode)
+                if best_cost is None or t < best_cost:
+                    best = (backend, factor, mode)
+                    best_cost = t
+                    best_st = st
+            # unchanged choices keep their overlap pricing; a flipped
+            # cell re-derives it from the constant window (zero when
+            # the base plan was tuned in isolation)
+            same = best == (base_ch.backend, base_ch.slicing_factor,
+                            base_ch.allreduce_mode)
+            wire = self._oracle_time(key, *best)
+            out.entries[key] = Choice(
+                backend=best[0], slicing_factor=best[1],
+                allreduce_mode=best[2],
+                predicted_time=max(0.0, wire - self.overlap_window),
+                baseline_time=base_ch.baseline_time,
+                overlap=(base_ch.overlap if same
+                         else self.overlap_window > 0.0),
+                hidden_time=(base_ch.hidden_time if same
+                             else min(wire, self.overlap_window)),
+                measured_us=(best_st.ewma_seconds * 1e6
+                             if best_st is not None else 0.0),
+                sample_count=(best_st.samples
+                              if best_st is not None else 0),
+                ewma_alpha=self.alpha if best_st is not None else 0.0)
+        return out
+
+    # -- hot-swap ---------------------------------------------------------
+
+    def refresh_and_activate(self) -> Plan:
+        """Refresh + publish through the epoch-versioned registry.  The
+        refreshed plan also becomes this tuner's base, so subsequent
+        refreshes re-resolve from the latest measured state."""
+        from repro.tuner import runtime
+        plan = self.refresh()
+        self.plan = plan
+        runtime.set_active_plan(plan)
+        return plan
+
+    def maybe_retune(self, step_index: int) -> Optional[Plan]:
+        """Hot-swap hook for step loops: refresh + activate every
+        ``retune_interval`` steps (at the *end* of the interval's last
+        step).  Returns the refreshed plan when one was published."""
+        if (step_index + 1) % self.retune_interval != 0:
+            return None
+        return self.refresh_and_activate()
+
+
+def choices_changed(old: Plan, new: Plan) -> bool:
+    """Whether re-resolution actually moved any cell's concrete
+    (backend, slicing_factor, allreduce_mode).  Launchers re-trace the
+    step only when this is True - a refresh that merely updated the
+    measured EWMAs does not invalidate the compiled step.
+
+    A cell *grown* at a measured workload bucket counts as changed
+    only when it resolves differently from what the old plan's
+    nearest-bucket lookup served for that size - same resolution via a
+    now-exact cell compiles to the same program."""
+    def knobs(c: Optional[Choice]) -> Optional[tuple]:
+        return None if c is None else (c.backend, c.slicing_factor,
+                                       c.allreduce_mode)
+    if set(old.entries) - set(new.entries):
+        return True          # a cell disappeared: resolution may move
+    for key, c in new.entries.items():
+        prev = old.entries.get(key)
+        if prev is None:     # grown cell: what did lookup serve here?
+            prev = old.lookup(key[0], 1 << key[1], key[2],
+                              level=key[3] if len(key) == 4 else None)
+        if knobs(prev) != knobs(c):
+            return True
+    return False
+
+
+def fold_measurements(plan: Plan, timings: list, *,
+                      alpha: float = DEFAULT_ALPHA,
+                      min_samples: int = DEFAULT_MIN_SAMPLES,
+                      pool: CXLPoolConfig = CXL_POOL,
+                      ib: InfiniBandConfig = INFINIBAND) -> Plan:
+    """One-shot offline fold: ledger timing samples -> refreshed v4
+    plan (what ``launch/tune.py --measurements`` uses)."""
+    ot = OnlineTuner(plan, alpha=alpha, min_samples=min_samples,
+                     pool=pool, ib=ib)
+    ot.observe_timings(timings)
+    return ot.refresh()

@@ -19,6 +19,13 @@ cell tuned for the rack-scale pool never drives the cross-pod IB
 level.  The topology itself rides in ``meta["topology"]`` so
 ``tune -> train`` round-trips through one JSON file.
 
+Format v4 closes the loop on the offline oracles: cells additionally
+carry ``measured_us``/``sample_count``/``ewma_alpha``, the
+exponentially-weighted measured wall time that ``tuner.online`` folds
+back into the plan from ledger-tagged timing samples.  A refreshed
+plan's ``measured_us`` overrides the simulator prediction as the
+cell's cost (``Choice.effective_time``) once enough samples landed.
+
 Lookup is log2-bucketed with nearest-bucket fallback: an unseen message
 size resolves to the closest tuned bucket (ties to the smaller), an
 unseen rank count to the closest tuned nranks for that primitive, and
@@ -37,9 +44,10 @@ from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
                            InfiniBandConfig)
 from repro.core.topology import Topology
 
-PLAN_VERSION = 3          # v3 adds per-(level, fabric) cells + topology
-_READABLE_VERSIONS = (1, 2, 3)
-# v1: flat cells only; v2: + per-cell overlap fields; v3: + level keys.
+PLAN_VERSION = 4          # v4 adds per-cell measured-cost feedback
+_READABLE_VERSIONS = (1, 2, 3, 4)
+# v1: flat cells only; v2: + per-cell overlap fields; v3: + level keys;
+# v4: + measured_us/sample_count/ewma_alpha (online re-tuning feedback).
 # Older formats load forward (missing fields default); unknown formats
 # raise PlanVersionError.
 
@@ -79,6 +87,28 @@ class Choice:
     # expects compute to hide (exposed = wire - hidden).
     overlap: bool = False
     hidden_time: float = 0.0
+    # Online re-tuning feedback (plan format v4): ``measured_us`` is
+    # the exponentially-weighted mean (microseconds, smoothing factor
+    # ``ewma_alpha``) of the ``sample_count`` ledger-tagged wall-time
+    # measurements of the *chosen* candidate, persisted by
+    # ``tuner.online.OnlineTuner.refresh`` (which re-resolves cells by
+    # comparing its live per-candidate EWMAs against the oracle) so a
+    # saved plan warm-starts the next run's tuner.  Zero-sample cells
+    # are purely offline.
+    measured_us: float = 0.0
+    sample_count: int = 0
+    ewma_alpha: float = 0.0
+
+    def effective_time(self, min_samples: int = 1) -> float:
+        """The cell's best per-launch cost estimate in seconds: the
+        persisted measured EWMA once ``min_samples`` samples backed it,
+        else the oracle prediction.  ``Communicator(backend='auto')``
+        prices its audit entries with this, so step-time apportioning
+        and dry-run deltas see measured reality on refined plans."""
+        if self.sample_count >= max(1, min_samples) and \
+                self.measured_us > 0.0:
+            return self.measured_us * 1e-6
+        return self.predicted_time
 
 
 PlanKey = tuple  # (primitive, bucket, nranks) or (..., level)
@@ -180,7 +210,11 @@ class Plan:
                 baseline_time=float(e["baseline_time"]),
                 # v1 plans carry no overlap fields: cost-in-isolation
                 overlap=bool(e.get("overlap", False)),
-                hidden_time=float(e.get("hidden_time", 0.0)))
+                hidden_time=float(e.get("hidden_time", 0.0)),
+                # pre-v4 plans carry no measured feedback: offline-only
+                measured_us=float(e.get("measured_us", 0.0)),
+                sample_count=int(e.get("sample_count", 0)),
+                ewma_alpha=float(e.get("ewma_alpha", 0.0)))
         return plan
 
 

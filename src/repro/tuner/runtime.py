@@ -15,6 +15,14 @@ Topology plans (format v3) are fingerprinted by the topology, and
 (``core.topology.set_active_topology``) so every Communicator in the
 process decomposes tuple axes against the levels the plan was tuned
 for - one ``--plan`` flag wires up the whole tune -> train workflow.
+
+The registry is *epoch-versioned* for online re-tuning: every
+``set_active_plan`` bumps a monotonically increasing epoch, and
+``Communicator(backend='auto')`` stamps the epoch it resolved against
+into the ledger audit.  Hot-swapping a refreshed plan between steps is
+therefore just ``set_active_plan(new_plan)`` + re-tracing the step -
+per-call resolution always reads the registry, no plan state is baked
+into the Communicator itself.
 """
 from __future__ import annotations
 
@@ -31,18 +39,34 @@ from repro.tuner.plan import (Plan, hardware_fingerprint, load_plan,
 from repro.tuner.sweep import SMOKE_GRID, TuneGrid, generate_plan
 
 _ACTIVE: list = [None]
+_EPOCH: list = [0]
 
 
 def set_active_plan(plan: Optional[Plan]) -> None:
     _ACTIVE[0] = plan
+    _EPOCH[0] += 1
 
 
 def get_active_plan() -> Optional[Plan]:
     return _ACTIVE[0]
 
 
+def plan_epoch() -> int:
+    """Monotonic version of the active-plan registry: bumps on every
+    ``set_active_plan`` / ``clear_active_plan``, so a consumer can tell
+    whether the plan it resolved against is still current."""
+    return _EPOCH[0]
+
+
+def get_active_plan_versioned() -> tuple:
+    """(active plan, registry epoch) - the pair ``backend='auto'``
+    resolution reads, so audits can attribute each decision to the plan
+    generation that produced it."""
+    return _ACTIVE[0], _EPOCH[0]
+
+
 def clear_active_plan() -> None:
-    _ACTIVE[0] = None
+    set_active_plan(None)
 
 
 def activate_plan_file(path: str, *,
@@ -60,11 +84,19 @@ def activate_plan_file(path: str, *,
         if current is None:
             set_active_topology(topo)
         elif current.fingerprint() != topo.fingerprint():
+            # Name BOTH fingerprints (and each side's level layout):
+            # with only one of them in the log line there is no way to
+            # tell from logs which of the two topologies a stray plan
+            # actually belongs to.
             warnings.warn(
-                f"active topology ({current.fingerprint()}) differs "
-                f"from the one plan {path} was tuned for "
-                f"({topo.fingerprint()}); its level-keyed cells will "
-                f"not resolve and collectives fall back to ring")
+                f"topology conflict: the active topology fingerprints "
+                f"to {current.fingerprint()} (levels "
+                f"{[f'{lv.axis}:{lv.fabric}' for lv in current.levels]})"
+                f" but plan {path} was tuned for topology "
+                f"{topo.fingerprint()} (levels "
+                f"{[f'{lv.axis}:{lv.fabric}' for lv in topo.levels]}); "
+                f"the plan's level-keyed cells will not resolve and "
+                f"collectives fall back to ring")
     return plan
 
 

@@ -419,6 +419,104 @@ def check_topology_hierarchical() -> None:
     print("  topology-hierarchical ok")
 
 
+def check_online_retune_hotswap() -> None:
+    """Hot-swapping a measurement-refreshed plan mid-run must keep the
+    numerics bitwise-identical to running the whole loop under the
+    fixed plan.  Two swap flavors are exercised mid-loop:
+
+    1. a refresh whose measurements *confirm* the oracle (EWMA-only
+       update: the workload's resolved choices cannot move);
+    2. a refresh whose measurements flip a cell the workload never
+       touches (choices_changed is True, the step re-traces against
+       the bumped registry epoch).
+
+    Either way the collectives the step actually runs are identical,
+    so the retraced program must produce bit-identical parameters.
+    """
+    from repro import tuner
+    from repro.core import ledger
+
+    mesh = jax.make_mesh((8,), ("x",))
+    base = tuner.get_active_plan()
+    assert base is not None
+
+    def make_step():
+        comm = Communicator(backend="auto")  # registry resolution
+        def step(p, x):
+            g = comm.all_reduce(x * p, "x")
+            piece = comm.reduce_scatter(g, "x")
+            return p - 0.1 * comm.all_gather(piece, "x")
+        return jax.jit(jax.shard_map(step, mesh=mesh,
+                                     in_specs=(P(), P("x")),
+                                     out_specs=P(), check_vma=False))
+
+    rng = np.random.default_rng(7)
+    p0 = rng.standard_normal((16, 4)).astype(np.float32)
+    xs = [rng.standard_normal((128, 4)).astype(np.float32)
+          for _ in range(6)]
+
+    # reference: 6 steps under the fixed base plan
+    tuner.set_active_plan(base)
+    ledger.reset()
+    step = make_step()
+    p_ref = jnp.asarray(p0)
+    for x in xs:
+        p_ref = step(p_ref, x)
+    profile = ledger.snapshot()["auto_choices"]
+    assert profile, "auto resolution recorded no choices"
+
+    # hot-swap run: swap at step 3 with oracle-confirming measurements,
+    # then at step 5 with a flip in an untouched broadcast cell
+    tuner.set_active_plan(base)
+    step = make_step()
+    p_hot = jnp.asarray(p0)
+    ot = tuner.OnlineTuner(base, min_samples=2)
+    for i, x in enumerate(xs):
+        if i == 3:
+            for c in profile:
+                # only feed cells the plan already holds: a sample at
+                # an untuned bucket would legitimately grow an
+                # exact-bucket cell and re-resolve it at its own size
+                key = (c["primitive"],
+                       tuner.size_bucket(c["msg_bytes"]), c["nranks"])
+                if key not in base.entries:
+                    continue
+                for _ in range(2):   # measured == predicted: confirm
+                    ot.observe(c["primitive"], c["msg_bytes"],
+                               c["nranks"], c["backend"],
+                               c["predicted_time"],
+                               slicing_factor=c["slicing_factor"],
+                               allreduce_mode=c["allreduce_mode"])
+            refreshed = ot.refresh_and_activate()
+            for c in profile:   # workload cells resolve identically
+                want = base.lookup(c["primitive"], c["msg_bytes"],
+                                   c["nranks"])
+                got = refreshed.lookup(c["primitive"], c["msg_bytes"],
+                                       c["nranks"])
+                assert (got.backend, got.slicing_factor,
+                        got.allreduce_mode) == \
+                    (want.backend, want.slicing_factor,
+                     want.allreduce_mode), (c, want, got)
+            step = make_step()   # re-trace against the new epoch
+        if i == 5:
+            # flip an untouched broadcast cell: its *chosen* candidate
+            # measures terribly, so the argmin must move off it
+            bch = base.lookup("broadcast", 4096, 4)
+            for _ in range(2):
+                ot.observe("broadcast", 4096, 4, bch.backend, 10.0,
+                           slicing_factor=bch.slicing_factor,
+                           allreduce_mode=bch.allreduce_mode)
+            refreshed = ot.refresh_and_activate()
+            assert tuner.choices_changed(base, refreshed)
+            step = make_step()
+        p_hot = step(p_hot, x)
+
+    assert np.array_equal(np.asarray(p_ref), np.asarray(p_hot)), \
+        "hot-swap perturbed the numerics"
+    tuner.set_active_plan(base)
+    print("  online-retune-hotswap ok (bitwise vs fixed plan)")
+
+
 def check_ledger_vs_hlo():
     """For an unscanned program the trace-time ledger and the compiled-HLO
     parse must agree on collective wire bytes (the scan undercount is the
@@ -455,6 +553,7 @@ if __name__ == "__main__":
         slicing_factors=(1, 4))))
 
     check_ledger_vs_hlo()
+    check_online_retune_hotswap()
     check_topology_hierarchical()
     # ring/cxl draw from the module RNG in the original order (the
     # chaotic train-equivalence checks below are sensitive to the global

@@ -33,6 +33,32 @@ def test_train_launcher_sharded(tmp_path):
 
 
 @pytest.mark.slow
+def test_train_launcher_online_retune(tmp_path):
+    """--online-retune end to end: measured step times fold into the
+    plan, hot-swaps publish through the registry, and --plan-out
+    persists a format-v4 refined plan."""
+    import json
+    env = _env(4)
+    env["REPRO_PLAN_CACHE"] = str(tmp_path / "cache")
+    out = tmp_path / "refined.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "llama3.2-1b", "--smoke", "--steps", "12", "--batch", "4",
+         "--seq", "32", "--mesh", "2x2", "--backend", "auto",
+         "--online-retune", "--retune-interval", "5",
+         "--plan-out", str(out)],
+        env=env, capture_output=True, text=True, timeout=1200,
+        cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "online re-tuning" in proc.stdout
+    assert "saved refined plan" in proc.stdout
+    doc = json.load(open(out))
+    assert doc["version"] == 4
+    # the refined plan carries measured feedback somewhere
+    assert any(e.get("sample_count", 0) > 0 for e in doc["entries"])
+
+
+@pytest.mark.slow
 def test_serve_launcher():
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-6b",

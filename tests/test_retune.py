@@ -1,0 +1,398 @@
+"""Online re-tuning: plan format v4 compat, ledger timing capture,
+EWMA aggregation/convergence under noisy samples, measured-over-oracle
+re-resolution, workload-bucket cell growth, the epoch-versioned
+active-plan registry, and measurement folding (the mid-run bitwise
+hot-swap equivalence runs on the 8-device mesh in _mesh_runner.py)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import tuner
+from repro.core import ledger
+from repro.core.api import Communicator
+from repro.core.hw import CXL_POOL, MiB
+
+TINY = tuner.TuneGrid(
+    primitives=("all_gather", "scatter"),
+    sizes=(1 * MiB, 16 * MiB), nranks=(2, 3),
+    slicing_factors=(1, 4), allreduce_modes=("two_phase",))
+
+# 4x-optimistic pool oracle: believes the pool twice as fast per
+# direction on both the device and server caps than reality
+MISCAL = dataclasses.replace(CXL_POOL, device_bw=CXL_POOL.device_bw * 4,
+                             server_bw=CXL_POOL.server_bw * 4)
+
+
+@pytest.fixture(scope="module")
+def tiny_plan():
+    return tuner.generate_plan(TINY)
+
+
+@pytest.fixture(scope="module")
+def miscal_plan():
+    return tuner.generate_plan(TINY, pool=MISCAL)
+
+
+# -- plan format v4 -------------------------------------------------------
+
+def _entry(**kw):
+    base = {"primitive": "all_gather", "bucket": 20, "nranks": 3,
+            "backend": "cxl", "slicing_factor": 4,
+            "allreduce_mode": "two_phase",
+            "predicted_time": 1e-3, "baseline_time": 2e-3}
+    base.update(kw)
+    return base
+
+
+def test_plan_v1_to_v4_compat_chain():
+    """The same entries doc loads under every readable version, with
+    the fields each version lacks defaulting: v1 has no overlap
+    fields, v1/v2 no level keys, v1-v3 no measured feedback."""
+    for version in (1, 2, 3):
+        p = tuner.Plan.from_json(
+            {"version": version, "fingerprint": "f", "meta": {},
+             "entries": [_entry()]})
+        ch = p.entries[("all_gather", 20, 3)]
+        assert ch.measured_us == 0.0 and ch.sample_count == 0
+        assert ch.ewma_alpha == 0.0
+        # pre-v4 cells cost by the oracle regardless of min_samples
+        assert ch.effective_time(1) == ch.predicted_time
+    v4 = {"version": 4, "fingerprint": "f", "meta": {},
+          "entries": [_entry(level="1:abc", measured_us=1500.0,
+                             sample_count=5, ewma_alpha=0.3)]}
+    p4 = tuner.Plan.from_json(v4)
+    ch = p4.entries[("all_gather", 20, 3, "1:abc")]
+    assert ch.measured_us == 1500.0 and ch.sample_count == 5
+    # measured overrides the oracle once min_samples is met...
+    assert ch.effective_time(3) == pytest.approx(1.5e-3)
+    # ...but not before
+    assert ch.effective_time(9) == ch.predicted_time
+    again = tuner.Plan.from_json(p4.to_json())
+    assert again.entries == p4.entries
+    assert p4.to_json()["version"] == 4
+
+
+def test_plan_v5_raises_version_error(tmp_path):
+    doc = {"version": 5, "fingerprint": "x", "entries": []}
+    path = tmp_path / "plan.json"
+    path.write_text(json.dumps(doc))
+    with pytest.raises(tuner.PlanVersionError) as ei:
+        tuner.load_plan(str(path))
+    assert "5" in str(ei.value) and "(1, 2, 3, 4)" in str(ei.value)
+
+
+def test_saved_plan_roundtrips_measured_fields(tiny_plan, tmp_path):
+    ot = tuner.OnlineTuner(tiny_plan, min_samples=1)
+    # a measurement fast enough to win the cell outright, so the
+    # winner carries the persisted measured fields
+    ot.observe("all_gather", 1 * MiB, 3, "ring", 1e-5)
+    refined = ot.refresh()
+    ch = refined.lookup("all_gather", 1 * MiB, 3)
+    assert ch.backend == "ring" and ch.sample_count == 1
+    path = str(tmp_path / "plan.json")
+    tuner.save_plan(refined, path)
+    loaded = tuner.load_plan(path)
+    assert loaded.entries == refined.entries
+    # the refreshed plan warm-starts a fresh tuner's EWMAs
+    ot2 = tuner.OnlineTuner(loaded, min_samples=1)
+    key = tuner.online.cell_key("all_gather", 1 * MiB, 3)
+    st = ot2.stats[(key, ("ring", 4, "two_phase"))]
+    assert st.samples == 1
+    assert st.ewma_seconds == pytest.approx(1e-5)
+
+
+# -- ledger timing capture ------------------------------------------------
+
+def test_ledger_timing_capture_and_cells():
+    ledger.reset()
+    ledger.record_timing("all_gather", 1 * MiB, 3, "cxl", 1e-3,
+                         slicing_factor=2)
+    with ledger.timed("all_reduce", 2 * MiB, 4, "ring"):
+        pass
+    snap = ledger.snapshot()
+    assert len(snap["timings"]) == 2
+    t0 = snap["timings"][0]
+    assert t0["backend"] == "cxl" and t0["slicing_factor"] == 2
+    assert snap["timings"][1]["seconds"] >= 0.0
+    cells = snap["timing_cells"]
+    k = "all_gather/b20/n3@cxl:2:two_phase"
+    assert cells[k]["samples"] == 1
+    assert cells[k]["mean_seconds"] == pytest.approx(1e-3)
+    assert "all_reduce/b21/n4@ring:4:two_phase" in cells
+    ledger.reset()
+    assert ledger.snapshot()["timings"] == []
+
+
+# -- EWMA aggregation + convergence under noise ---------------------------
+
+def test_ewma_update_sequence(tiny_plan):
+    ot = tuner.OnlineTuner(tiny_plan, alpha=0.5, min_samples=2)
+    for s in (1.0, 2.0, 3.0):
+        ot.observe("all_gather", 1 * MiB, 2, "ring", s)
+    key = tuner.online.cell_key("all_gather", 1 * MiB, 2)
+    st = ot.stats[(key, ("ring", 4, "two_phase"))]
+    # 1.0 -> .5*2+.5*1=1.5 -> .5*3+.5*1.5=2.25
+    assert st.ewma_seconds == pytest.approx(2.25)
+    assert st.samples == 3
+
+
+def test_ewma_converges_under_noisy_samples(tiny_plan):
+    """The EWMA of noisy samples lands within the noise scale of the
+    true mean, for every (alpha, truth) combination tried."""
+    rng = np.random.default_rng(0)
+    for alpha, true_s in ((0.1, 5e-4), (0.3, 2e-3), (0.5, 1e-2)):
+        ot = tuner.OnlineTuner(tiny_plan, alpha=alpha, min_samples=3)
+        for _ in range(200):
+            ot.observe("scatter", 1 * MiB, 3, "ring",
+                       true_s * rng.normal(1.0, 0.1))
+        key = tuner.online.cell_key("scatter", 1 * MiB, 3)
+        st = ot.stats[(key, ("ring", 4, "two_phase"))]
+        # EWMA std ~= noise_std * sqrt(alpha / (2 - alpha))
+        tol = 4 * 0.1 * (alpha / (2 - alpha)) ** 0.5
+        assert abs(st.ewma_seconds - true_s) <= tol * true_s, \
+            (alpha, true_s, st.ewma_seconds)
+
+
+def test_refresh_flips_to_measured_winner(miscal_plan):
+    """Scatter at 1 MiB / 2 ranks: ring truly wins, but the
+    4x-optimistic pool oracle routes it to cxl.  Feeding the truth
+    back flips the cell; candidates walk until the measured winner
+    survives (at most one interval per candidate)."""
+    assert miscal_plan.lookup("scatter", 1 * MiB, 2).backend == "cxl"
+    ot = tuner.OnlineTuner(miscal_plan, min_samples=2, pool=MISCAL,
+                           retune_interval=2)
+    plan = miscal_plan
+    for step in range(12):
+        ch = plan.lookup("scatter", 1 * MiB, 2)
+        truth = tuner.predict_time(ch.backend, "scatter", 2, 1 * MiB,
+                                   slicing_factor=ch.slicing_factor,
+                                   allreduce_mode=ch.allreduce_mode)
+        ot.observe("scatter", 1 * MiB, 2, ch.backend, truth,
+                   slicing_factor=ch.slicing_factor,
+                   allreduce_mode=ch.allreduce_mode)
+        new = ot.maybe_retune(step)
+        if new is not None:
+            plan = new
+    tuner.clear_active_plan()
+    final = plan.lookup("scatter", 1 * MiB, 2)
+    assert final.backend == "ring"
+    assert final.sample_count >= 2
+    assert final.measured_us == pytest.approx(
+        tuner.predict_time("ring", "scatter", 2, 1 * MiB) * 1e6)
+
+
+def test_refresh_grows_cells_at_measured_buckets(tiny_plan):
+    """A measurement at a bucket the grid never tuned grows an exact
+    cell, so runtime lookup stops falling back to a neighbor."""
+    ot = tuner.OnlineTuner(tiny_plan, min_samples=1)
+    assert ("all_gather", 10, 2) not in tiny_plan.entries
+    ot.observe("all_gather", 1024, 2, "ring", 3e-3)
+    refined = ot.refresh()
+    assert ("all_gather", 10, 2) in refined.entries
+    # the grown cell's lookup is exact (same bucket), not nearest
+    got = refined.lookup("all_gather", 1024, 2)
+    assert got is refined.entries[("all_gather", 10, 2)]
+    # base cells all survive
+    assert set(tiny_plan.entries) <= set(refined.entries)
+
+
+def test_refresh_keeps_overlap_objective():
+    """A measurement-free refresh of an overlap-tuned plan must not
+    flip choices: the constant window is re-applied to oracle prices
+    (same exposed-time objective as the sweep), and per-cell windows -
+    which are not serialized - freeze unmeasured cells outright."""
+    const = tuner.generate_plan(TINY, overlap_compute=150e-6)
+    ot = tuner.OnlineTuner(const)
+    assert ot.overlap_window == pytest.approx(150e-6)
+    refreshed = ot.refresh()
+    assert not tuner.choices_changed(const, refreshed)
+    for k in const.entries:
+        assert refreshed.entries[k].overlap == const.entries[k].overlap
+        assert refreshed.entries[k].predicted_time == pytest.approx(
+            const.entries[k].predicted_time)
+    percell = tuner.generate_plan(
+        TINY, overlap_compute=lambda p, s, n: 150e-6)
+    assert percell.meta["overlap_compute_s"] == "per-cell"
+    ot2 = tuner.OnlineTuner(percell)
+    assert ot2.window_unknown
+    frozen = ot2.refresh()
+    assert frozen.entries == percell.entries
+    # measured cells still re-resolve even under unknown windows
+    ch = percell.lookup("scatter", 1 * MiB, 2)
+    ot2.observe("scatter", 1 * MiB, 2, ch.backend, 10.0,
+                slicing_factor=ch.slicing_factor,
+                allreduce_mode=ch.allreduce_mode)
+    ot2.min_samples = 1
+    moved = ot2.refresh()
+    assert moved.lookup("scatter", 1 * MiB, 2).backend != ch.backend \
+        or moved.lookup("scatter", 1 * MiB,
+                        2).slicing_factor != ch.slicing_factor
+
+
+def test_flat_plan_under_active_topology_maps_levels(tiny_plan):
+    """A flat plan driven under an active topology audits level tags by
+    axis name; the tuner must map them through the *active* topology's
+    level keys, or every measurement lands in cells runtime lookup
+    never queries."""
+    from repro.core.topology import (Level, Topology,
+                                     clear_active_topology,
+                                     set_active_topology)
+    topo = Topology(levels=(Level("pod", "ib"), Level("data", "cxl")))
+    set_active_topology(topo)
+    try:
+        ot = tuner.OnlineTuner(tiny_plan, min_samples=1)
+        ot.observe("all_gather", 1 * MiB, 2, "ring", 1e-9,
+                   level="data")     # axis name, as the ledger tags it
+        lkey = topo.level_key("data")
+        key = ("all_gather", tuner.size_bucket(1 * MiB), 2, lkey)
+        assert (key, ("ring", 4, "two_phase")) in ot.stats
+        refined = ot.refresh()
+        assert key in refined.entries
+        # runtime lookup with the level key resolves the grown cell
+        got = refined.lookup("all_gather", 1 * MiB, 2, level=lkey)
+        assert got is refined.entries[key]
+    finally:
+        clear_active_topology()
+    # no topology in scope: an unmappable axis name aggregates
+    # level-agnostically instead of creating unreachable cells
+    ot2 = tuner.OnlineTuner(tiny_plan, min_samples=1)
+    ot2.observe("all_gather", 1 * MiB, 2, "ring", 1e-9, level="data")
+    key3 = ("all_gather", tuner.size_bucket(1 * MiB), 2)
+    assert (key3, ("ring", 4, "two_phase")) in ot2.stats
+    # a raw "<idx>:<fp>" key from a persisted record passes through
+    ot2.observe("all_gather", 1 * MiB, 2, "ring", 1e-9,
+                level="1:0123456789ab")
+    key4 = key3 + ("1:0123456789ab",)
+    assert (key4, ("ring", 4, "two_phase")) in ot2.stats
+
+
+def test_observe_step_apportions_by_predicted_share(tiny_plan):
+    ot = tuner.OnlineTuner(tiny_plan, min_samples=1)
+    choices = [
+        {"primitive": "all_gather", "msg_bytes": 1 * MiB, "nranks": 2,
+         "backend": "ring", "slicing_factor": 4,
+         "allreduce_mode": "two_phase", "predicted_time": 3e-3,
+         "calls": 2.0},
+        {"primitive": "scatter", "msg_bytes": 1 * MiB, "nranks": 2,
+         "backend": "cxl", "slicing_factor": 4,
+         "allreduce_mode": "two_phase", "predicted_time": 1e-3,
+         "calls": 4.0},
+    ]
+    # total predicted = 3e-3*2 + 1e-3*4 = 1e-2; step measured 2e-2
+    assert ot.observe_step(2e-2, choices) == 2
+    k_ag = tuner.online.cell_key("all_gather", 1 * MiB, 2)
+    k_sc = tuner.online.cell_key("scatter", 1 * MiB, 2)
+    ag = ot.stats[(k_ag, ("ring", 4, "two_phase"))]
+    sc = ot.stats[(k_sc, ("cxl", 4, "two_phase"))]
+    # per-launch: 2e-2 * (6e-3/1e-2) / 2 = 6e-3 ; 2e-2 * (4e-3/1e-2)/4
+    assert ag.ewma_seconds == pytest.approx(6e-3)
+    assert sc.ewma_seconds == pytest.approx(2e-3)
+    # zero or missing predicted time: nothing to apportion
+    assert ot.observe_step(1.0, [{"primitive": "reduce",
+                                  "msg_bytes": 1, "nranks": 2,
+                                  "backend": "ring",
+                                  "predicted_time": 0.0}]) == 0
+
+
+# -- epoch-versioned registry + hot-swap plumbing -------------------------
+
+def test_registry_epoch_bumps_and_stamps_audit(tiny_plan):
+    tuner.clear_active_plan()
+    e0 = tuner.plan_epoch()
+    tuner.set_active_plan(tiny_plan)
+    try:
+        assert tuner.plan_epoch() == e0 + 1
+        assert tuner.get_active_plan_versioned() == (tiny_plan, e0 + 1)
+        ledger.reset()
+        comm = Communicator(backend="auto")   # registry resolution
+        comm._choice("all_gather", 1 * MiB, 3)
+        audit = ledger.snapshot()["auto_choices"]
+        assert audit[0]["plan_epoch"] == e0 + 1
+        # an explicitly attached plan is not registry-versioned
+        ledger.reset()
+        Communicator(backend="auto", plan=tiny_plan)._choice(
+            "all_gather", 1 * MiB, 3)
+        assert ledger.snapshot()["auto_choices"][0]["plan_epoch"] is None
+    finally:
+        tuner.clear_active_plan()
+        ledger.reset()
+
+
+def test_refresh_and_activate_publishes(miscal_plan):
+    ot = tuner.OnlineTuner(miscal_plan, min_samples=1, pool=MISCAL)
+    tuner.clear_active_plan()
+    e0 = tuner.plan_epoch()
+    try:
+        plan = ot.refresh_and_activate()
+        assert tuner.get_active_plan() is plan
+        assert tuner.plan_epoch() == e0 + 1
+        assert ot.plan is plan     # next refresh builds on this one
+    finally:
+        tuner.clear_active_plan()
+
+
+def test_choices_changed(tiny_plan):
+    ot = tuner.OnlineTuner(tiny_plan, min_samples=1)
+    same = ot.refresh()
+    assert not tuner.choices_changed(tiny_plan, same)
+    ch = tiny_plan.lookup("scatter", 1 * MiB, 2)
+    ot.observe("scatter", 1 * MiB, 2, ch.backend, 10.0,
+               slicing_factor=ch.slicing_factor,
+               allreduce_mode=ch.allreduce_mode)
+    flipped = ot.refresh()
+    assert tuner.choices_changed(tiny_plan, flipped)
+
+
+def test_choices_changed_ignores_same_resolution_growth(tiny_plan):
+    """A cell grown at a measured bucket that resolves exactly like the
+    nearest-bucket cell it replaces must NOT count as changed - the
+    compiled step would be identical, so re-tracing is pure waste."""
+    served = tiny_plan.lookup("all_gather", 1024, 2)
+    ot = tuner.OnlineTuner(tiny_plan, min_samples=1)
+    # measure the served candidate fast enough to win its grown cell
+    # outright: the exact-bucket cell then resolves identically
+    ot.observe("all_gather", 1024, 2, served.backend, 1e-9,
+               slicing_factor=served.slicing_factor,
+               allreduce_mode=served.allreduce_mode)
+    grown = ot.refresh()
+    key = ("all_gather", tuner.size_bucket(1024), 2)
+    assert key in grown.entries
+    g = grown.entries[key]
+    assert (g.backend, g.slicing_factor, g.allreduce_mode) == (
+        served.backend, served.slicing_factor, served.allreduce_mode)
+    assert not tuner.choices_changed(tiny_plan, grown)
+
+
+def test_fold_measurements_via_ledger(tiny_plan):
+    """End-to-end tune --measurements path: ledger timing records in,
+    refreshed v4 plan out."""
+    ledger.reset()
+    ch = tiny_plan.lookup("all_gather", 16 * MiB, 3)
+    for _ in range(3):
+        ledger.record_timing("all_gather", 16 * MiB, 3, ch.backend,
+                             0.5, slicing_factor=ch.slicing_factor,
+                             allreduce_mode=ch.allreduce_mode)
+    refined = tuner.fold_measurements(
+        tiny_plan, ledger.snapshot()["timings"], min_samples=3)
+    ledger.reset()
+    new = refined.lookup("all_gather", 16 * MiB, 3)
+    # half a second measured: every oracle candidate beats it
+    assert (new.backend, new.slicing_factor) != \
+        (ch.backend, ch.slicing_factor)
+    assert refined.to_json()["version"] == 4
+
+
+def test_online_tuner_validates_args(tiny_plan):
+    with pytest.raises(ValueError):
+        tuner.OnlineTuner(tiny_plan, alpha=0.0)
+    with pytest.raises(ValueError):
+        tuner.OnlineTuner(tiny_plan, alpha=1.5)
+    with pytest.raises(ValueError):
+        tuner.OnlineTuner(tiny_plan, retune_interval=0)
+    # <= 1 rank or negative duration: silently ignored, not recorded
+    ot = tuner.OnlineTuner(tiny_plan)
+    ot.observe("all_gather", 1 * MiB, 1, "ring", 1e-3)
+    ot.observe("all_gather", 1 * MiB, 3, "ring", -1.0)
+    assert not ot.stats

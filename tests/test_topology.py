@@ -195,8 +195,13 @@ def test_activate_plan_file_keeps_explicit_topology(topo_plan,
     tuner.clear_active_plan()
     set_active_topology(other)
     try:
-        with pytest.warns(UserWarning, match="differs"):
+        with pytest.warns(UserWarning, match="topology conflict") as rec:
             tuner.activate_plan_file(path)
+        # the warning must name BOTH fingerprints - with only one in
+        # the logs a conflict cannot be attributed to either side
+        msg = str(rec[0].message)
+        assert other.fingerprint() in msg
+        assert TOPO.fingerprint() in msg
         assert get_active_topology() is other
     finally:
         tuner.clear_active_plan()
@@ -239,7 +244,7 @@ def test_unknown_version_raises_plan_version_error(tmp_path):
     with pytest.raises(tuner.PlanVersionError) as ei:
         tuner.load_plan(str(path))
     msg = str(ei.value)
-    assert "99" in msg and "(1, 2, 3)" in msg
+    assert "99" in msg and "(1, 2, 3, 4)" in msg
     # PlanVersionError is a ValueError: existing catch sites still work
     assert isinstance(ei.value, ValueError)
     with pytest.raises(tuner.PlanVersionError):
