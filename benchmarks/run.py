@@ -12,6 +12,8 @@ Prints ``name,value,notes`` CSV.  Modules:
              a 3-level (pod/node/gpu) multi-fabric topology
   retune   - online re-tuning convergence under a 4x mis-calibrated
              pool oracle (measured-cost feedback + plan hot-swap)
+  placement - placement planner vs hand-tuned / naive axis->level
+             assignments, regular and irregular (4+2) topologies
 
 ``--smoke`` runs the fast CI path: coarse-grid plan generation + the
 autotune and overlap audits (exercises the whole tuner + overlap stack
@@ -27,7 +29,7 @@ import time
 
 from benchmarks import (autotune, fig3_characterization, fig9_collectives,
                         fig10_scalability, fig11_chunks, llm_case_study,
-                        overlap, retune, topology)
+                        overlap, placement, retune, topology)
 
 MODULES = [
     ("fig3", fig3_characterization),
@@ -39,9 +41,11 @@ MODULES = [
     ("overlap", overlap),
     ("topology", topology),
     ("retune", retune),
+    ("placement", placement),
 ]
 
-SMOKE_MODULES = ("fig3", "autotune", "overlap", "topology", "retune")
+SMOKE_MODULES = ("fig3", "autotune", "overlap", "topology", "retune",
+                 "placement")
 
 
 def main() -> None:

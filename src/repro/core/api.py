@@ -36,6 +36,20 @@ and the ledger attributes wire bytes to the level/fabric that carries
 them.  Without a topology, tuple axes fall back to the flat per-level
 recursion for ``ring`` (a single fused ``psum``) and to the same
 hierarchical decomposition - untagged - for ``cxl``/``auto``.
+
+**Irregular (ragged) levels**: a topology level with a grouped shape
+vector (``Level(shape=(4, 2))`` - mixed per-pod fan-out) lives on one
+*flat* mesh axis of ``sum(shape)`` ranks.  AllReduce / AllGather /
+Gather over such an axis decompose into the grouped schedules of
+``core.mesh_collectives`` (within-group masked rings on this level's
+fabric, a per-pod sub-root exchange on the *parent* level's fabric,
+padding-free gather concatenation), with the ledger attributing the
+cross-group bytes to the parent level.  The grouped schedules are
+ppermute programs regardless of the resolved backend (``lax.psum``
+cannot reduce over a subgroup of a named axis), so on ragged levels
+the plan's choice steers the slicing factor and the audit, not the
+lowering.  The remaining primitives run the flat single-axis path on
+a ragged axis - numerically correct, hierarchy-blind.
 """
 from __future__ import annotations
 
@@ -166,6 +180,86 @@ class Communicator:
                       level=ax if level is not None else None,
                       fabric=level.fabric if level is not None else None)
 
+    # -- ragged (grouped-level) dispatch ----------------------------------
+
+    @staticmethod
+    def _grouped_level(topo: Optional[topo_mod.Topology], ax: str):
+        """The Level for ``ax`` when it declares more than one rank
+        group (the irregular-topology case), else None."""
+        if topo is None:
+            return None
+        lv = topo.level_for(ax)
+        return lv if lv is not None and lv.grouped else None
+
+    @staticmethod
+    def _cross_axis(topo: topo_mod.Topology, ax: str) -> str:
+        """The level whose fabric carries a ragged axis's cross-group
+        (sub-root) traffic: the parent level, or the level itself when
+        it is outermost."""
+        parent = topo.parent_of(ax)
+        return parent.axis if parent is not None else ax
+
+    def _ar_ragged(self, x: jnp.ndarray, ax: str,
+                   topo: topo_mod.Topology, level) -> jnp.ndarray:
+        shape = level.shape
+        s = ledger.nbytes(x)
+        max_g, n_g = max(shape), len(shape)
+        pax = self._cross_axis(topo, ax)
+        _, f_in, _, ov_in = self._choice("all_reduce", s, max_g, topo, ax)
+        _, f_x, _, ov_x = self._choice("all_reduce", s, n_g, topo, pax)
+        # within-group masked ring reads every peer's buffer (faithful
+        # schedule): s*(g-1) on this level's fabric; the sub-root
+        # exchange and fan-out ride the parent fabric / group rings.
+        self._rec("all_reduce", s * (max_g - 1), ov_in, topo, ax)
+        self._rec("all_reduce", s * (n_g - 1), ov_x, topo, pax)
+        self._rec("broadcast", float(s), ov_in, topo, ax)
+        y = mc.grouped_all_reduce(x, ax, shape, n_chunks=f_in)
+        z = mc.subroot_all_reduce(y, ax, shape, n_chunks=f_x)
+        return mc.grouped_broadcast(z, ax, shape, n_chunks=f_in)
+
+    def _ag_ragged(self, x: jnp.ndarray, ax: str,
+                   topo: topo_mod.Topology, level) -> jnp.ndarray:
+        shape = level.shape
+        s = ledger.nbytes(x)
+        max_g, n_g, n = max(shape), len(shape), sum(shape)
+        pax = self._cross_axis(topo, ax)
+        _, f_in, _, ov_in = self._choice("all_gather", s, max_g, topo, ax)
+        _, f_x, _, ov_x = self._choice("all_gather", s * max_g, n_g,
+                                       topo, pax)
+        self._rec("all_gather", s * (max_g - 1), ov_in, topo, ax)
+        self._rec("all_gather", s * n * (n_g - 1), ov_x, topo, pax)
+        self._rec("broadcast", float(s * n), ov_in, topo, ax)
+        return mc.ragged_all_gather(x, ax, shape, n_chunks=f_in,
+                                    cross_chunks=f_x)
+
+    def _gather_ragged(self, x: jnp.ndarray, ax: str, root: int,
+                       topo: topo_mod.Topology, level) -> jnp.ndarray:
+        shape = level.shape
+        s = ledger.nbytes(x)
+        max_g, n_g, n = max(shape), len(shape), sum(shape)
+        pax = self._cross_axis(topo, ax)
+        _, f_in, _, ov_in = self._choice("gather", s, max_g, topo, ax)
+        _, f_x, _, ov_x = self._choice("gather", s * max_g, n_g, topo,
+                                       pax)
+        self._rec("gather", s * (max_g - 1), ov_in, topo, ax)
+        self._rec("gather", s * n * (n_g - 1), ov_x, topo, pax)
+        return mc.ragged_gather(x, ax, shape, root=root, n_chunks=f_in,
+                                cross_chunks=f_x)
+
+    def _ar_axis(self, x: jnp.ndarray, ax: str,
+                 topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
+        lv = self._grouped_level(topo, ax)
+        if lv is not None:
+            return self._ar_ragged(x, ax, topo, lv)
+        return self._ar_level(x, ax, topo)
+
+    def _ag_axis(self, x: jnp.ndarray, ax: str,
+                 topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
+        lv = self._grouped_level(topo, ax)
+        if lv is not None:
+            return self._ag_ragged(x, ax, topo, lv)
+        return self._ag_level(x, ax, topo)
+
     # -- per-level single-axis dispatchers --------------------------------
 
     def _ar_level(self, x: jnp.ndarray, ax: str,
@@ -272,7 +366,7 @@ class Communicator:
         axes = _axes(axis)
         topo = self._topo()
         if len(axes) == 1:
-            return self._ar_level(x, axes[0], topo)
+            return self._ar_axis(x, axes[0], topo)
         hier = topo is not None and topo.covers(axes)
         if self.backend == "ring" and not hier:
             # single fused psum over the whole tuple axis: one reduction
@@ -288,8 +382,8 @@ class Communicator:
         return mc.hierarchical_all_reduce(
             x, axes,
             rs_fn=lambda z, ax: self._rs_level(z, ax, topo),
-            ar_fn=lambda z, ax: self._ar_level(z, ax, topo),
-            ag_fn=lambda z, ax: self._ag_level(z, ax, topo))
+            ar_fn=lambda z, ax: self._ar_axis(z, ax, topo),
+            ag_fn=lambda z, ax: self._ag_axis(z, ax, topo))
 
     def all_gather(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
         """Tiled gather along axis 0, rank-major over the (possibly
@@ -303,7 +397,7 @@ class Communicator:
         # the hierarchy-optimal one: the outer fabric carries each byte
         # exactly once.
         for ax in reversed(axes):
-            out = self._ag_level(out, ax, topo)
+            out = self._ag_axis(out, ax, topo)
         return out
 
     def reduce_scatter(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
@@ -391,6 +485,9 @@ class Communicator:
         axes = _axes(axis)
         topo = self._topo()
         if len(axes) == 1:
+            lv = self._grouped_level(topo, axes[0])
+            if lv is not None:
+                return self._gather_ragged(x, axes[0], root, topo, lv)
             return self._gather_level(x, axes[0], root, topo)
         rest, _, r_out, r_rest = self._split_root(axes, root)
         # gather each inner group's block at its local root, then gather

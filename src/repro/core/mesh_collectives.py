@@ -81,6 +81,215 @@ def hierarchical_all_reduce(x: jnp.ndarray, axes, *, rs_fn, ar_fn,
     return seg.reshape(orig_shape)
 
 
+# --------------------------------------------------------------------- #
+# grouped / ragged schedules (irregular topologies, core.topology)
+#
+# An irregular level (mixed per-pod fan-out, e.g. one pod of 4 nodes and
+# one of 2) cannot be a regular mesh axis of its own: it lives on ONE
+# flat mesh axis of sum(shape) ranks, partitioned into contiguous rank
+# groups.  SPMD forbids per-rank shapes, so the ragged decomposition
+# never produces uneven shards; instead it composes uniform-shape
+# grouped schedules:
+#
+# * within-group ops are masked ring rounds - every group forms its own
+#   ppermute ring, rounds run to max(shape)-1 and each rank masks the
+#   rounds beyond its own group size;
+# * cross-group traffic moves between per-group sub-roots (the first
+#   rank of each group) over the *parent* level's fabric;
+# * gathers concatenate padding-free: each rank scatters its shard into
+#   a full-size buffer at its global offset, and summing the sub-roots'
+#   disjoint-offset buffers IS the concatenation (no padded segments).
+# --------------------------------------------------------------------- #
+
+def _group_tables(group_shape) -> tuple:
+    """Static per-rank tables for contiguous rank groups: returns
+    (n, roots, group size per rank, position-in-group per rank,
+    group root per rank)."""
+    shape = tuple(int(g) for g in group_shape)
+    if not shape or any(g < 1 for g in shape):
+        raise ValueError(f"bad group shape {group_shape!r}")
+    gsize, gpos, groot, roots = [], [], [], []
+    start = 0
+    for g in shape:
+        roots.append(start)
+        for p in range(g):
+            gsize.append(g)
+            gpos.append(p)
+            groot.append(start)
+        start += g
+    return start, tuple(roots), gsize, gpos, groot
+
+
+def _group_ring_perm(group_shape) -> list:
+    """One ppermute whose cycles are the per-group rings."""
+    n, _, gsize, gpos, groot = _group_tables(group_shape)
+    return [(r, groot[r] + (gpos[r] + 1) % gsize[r]) for r in range(n)]
+
+
+def _check_axis(axis_name: str, group_shape) -> int:
+    n = lax.axis_size(axis_name)
+    want = sum(int(g) for g in group_shape)
+    if n != want:
+        raise ValueError(
+            f"group shape {tuple(group_shape)} spans {want} ranks but "
+            f"axis {axis_name!r} has {n}")
+    return n
+
+
+def grouped_all_reduce(x: jnp.ndarray, axis_name: str, group_shape,
+                       n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """AllReduce *within* each contiguous rank group of a flat axis.
+
+    Groups may have different sizes (``group_shape=(4, 2)``): rounds
+    run to ``max(group_shape) - 1`` on the merged per-group rings and
+    each rank stops accumulating after its own group's ``g - 1``
+    rounds, so no padding ranks or uneven shards appear.  Every rank
+    returns its group's sum.
+    """
+    _check_axis(axis_name, group_shape)
+    shape = tuple(int(g) for g in group_shape)
+    if max(shape) == 1:
+        return x
+    _, _, gsize, _, _ = _group_tables(shape)
+    idx = lax.axis_index(axis_name)
+    my_g = jnp.asarray(gsize)[idx]
+    perm = _group_ring_perm(shape)
+    out_chunks = []
+    for c in _split_chunks(x, n_chunks):
+        acc = c
+        cur = c
+        for t in range(1, max(shape)):
+            cur = lax.ppermute(cur, axis_name, perm)
+            acc = acc + jnp.where(t < my_g, cur, jnp.zeros_like(cur))
+        out_chunks.append(acc)
+    return jnp.concatenate(out_chunks, axis=0) if len(out_chunks) > 1 \
+        else out_chunks[0]
+
+
+def subroot_all_reduce(x: jnp.ndarray, axis_name: str, group_shape,
+                       n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """AllReduce *across* the per-group sub-roots (first rank of each
+    group); every other rank passes through unchanged.  This is the
+    only cross-group traffic of the ragged decomposition - the hop
+    that rides the parent level's fabric."""
+    n = _check_axis(axis_name, group_shape)
+    _, roots, _, _, _ = _group_tables(group_shape)
+    n_g = len(roots)
+    if n_g == 1:
+        return x
+    nxt = {roots[i]: roots[(i + 1) % n_g] for i in range(n_g)}
+    perm = [(r, nxt.get(r, r)) for r in range(n)]
+    idx = lax.axis_index(axis_name)
+    is_root = jnp.any(idx == jnp.asarray(roots))
+    out_chunks = []
+    for c in _split_chunks(x, n_chunks):
+        acc = c
+        cur = c
+        for _ in range(1, n_g):
+            cur = lax.ppermute(cur, axis_name, perm)
+            acc = acc + jnp.where(is_root, cur, jnp.zeros_like(cur))
+        out_chunks.append(acc)
+    return jnp.concatenate(out_chunks, axis=0) if len(out_chunks) > 1 \
+        else out_chunks[0]
+
+
+def grouped_broadcast(x: jnp.ndarray, axis_name: str, group_shape,
+                      n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """Every rank receives its group sub-root's value (pipelined ring
+    forward within each group, like ``broadcast`` with the distance
+    measured from the group root)."""
+    _check_axis(axis_name, group_shape)
+    shape = tuple(int(g) for g in group_shape)
+    if max(shape) == 1:
+        return x
+    _, _, _, gpos, _ = _group_tables(shape)
+    idx = lax.axis_index(axis_name)
+    dist = jnp.asarray(gpos)[idx]
+    perm = _group_ring_perm(shape)
+    out_chunks = []
+    for c in _split_chunks(x, n_chunks):
+        cur = c
+        out = jnp.where(dist == 0, c, jnp.zeros_like(c))
+        for step in range(1, max(shape)):
+            cur = lax.ppermute(cur, axis_name, perm)
+            out = jnp.where(dist == step, cur, out)
+            cur = jnp.where(dist == step, out, cur)  # forward my copy
+        out_chunks.append(out)
+    return jnp.concatenate(out_chunks, axis=0) if len(out_chunks) > 1 \
+        else out_chunks[0]
+
+
+def ragged_all_reduce(x: jnp.ndarray, axis_name: str, group_shape,
+                      n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """Hierarchical AllReduce over a flat axis with ragged groups:
+    within-group AllReduce, sub-root exchange across groups, grouped
+    broadcast back out.  Numerically a sum over the whole axis (same
+    result as the flat single-axis AllReduce up to summation order)."""
+    y = grouped_all_reduce(x, axis_name, group_shape, n_chunks=n_chunks)
+    z = subroot_all_reduce(y, axis_name, group_shape, n_chunks=n_chunks)
+    return grouped_broadcast(z, axis_name, group_shape, n_chunks=n_chunks)
+
+
+def ragged_all_gather(x: jnp.ndarray, axis_name: str, group_shape,
+                      n_chunks: int = DEFAULT_CHUNKS,
+                      cross_chunks: "int | None" = None) -> jnp.ndarray:
+    """Padding-free hierarchical all-gather over ragged groups.
+
+    Phase 1 rotates shards within each group, every rank writing each
+    received shard into a full-size output buffer at the *global*
+    rank-major offset - so after ``g - 1`` rounds each rank holds its
+    whole group's block, at the right place, with no padded segments.
+    Phase 2 sums the sub-roots' buffers across groups: the blocks sit
+    at disjoint offsets, so the sum IS the concatenation.  Phase 3
+    fans the assembled buffer back out within each group.  The result
+    matches the flat single-axis ``all_gather`` exactly (rank-major
+    order along axis 0).  ``cross_chunks`` is the slicing factor of
+    the cross-group (sub-root) phase - the hop a per-level plan may
+    tune separately; defaults to ``n_chunks``.
+    """
+    n = _check_axis(axis_name, group_shape)
+    shape = tuple(int(g) for g in group_shape)
+    if n == 1:
+        return x
+    if x.ndim == 0:
+        raise ValueError("ragged_all_gather needs at least 1-d input")
+    _, _, gsize, gpos, groot = _group_tables(shape)
+    idx = lax.axis_index(axis_name)
+    my_g = jnp.asarray(gsize)[idx]
+    my_pos = jnp.asarray(gpos)[idx]
+    my_root = jnp.asarray(groot)[idx]
+    perm = _group_ring_perm(shape)
+    lead = x.shape[0]
+    buf = jnp.zeros((n * lead,) + x.shape[1:], x.dtype)
+    buf = lax.dynamic_update_slice_in_dim(buf, x, idx * lead, axis=0)
+    cur = x
+    for t in range(1, max(shape)):
+        # after t hops my copy originated t ranks behind me in my group
+        cur = lax.ppermute(cur, axis_name, perm)
+        src = my_root + jnp.mod(my_pos - t, my_g)
+        upd = lax.dynamic_update_slice_in_dim(buf, cur, src * lead,
+                                              axis=0)
+        buf = jnp.where(t < my_g, upd, buf)
+    buf = subroot_all_reduce(buf, axis_name, shape,
+                             n_chunks=cross_chunks if cross_chunks
+                             is not None else n_chunks)
+    return grouped_broadcast(buf, axis_name, shape, n_chunks=n_chunks)
+
+
+def ragged_gather(x: jnp.ndarray, axis_name: str, group_shape,
+                  root: int = 0,
+                  n_chunks: int = DEFAULT_CHUNKS,
+                  cross_chunks: "int | None" = None) -> jnp.ndarray:
+    """Gather-to-root over ragged groups (rank-major concatenation,
+    non-root ranks return zeros), via the padding-free assembly of
+    ``ragged_all_gather``."""
+    full = ragged_all_gather(x, axis_name, group_shape,
+                             n_chunks=n_chunks,
+                             cross_chunks=cross_chunks)
+    idx = lax.axis_index(axis_name)
+    return jnp.where(idx == root, full, jnp.zeros_like(full))
+
+
 def _split_chunks(x: jnp.ndarray, n_chunks: int) -> list[jnp.ndarray]:
     """Split along axis 0 (the paper's slicing factor).  Falls back to a
     single chunk when the leading dim does not divide."""

@@ -15,14 +15,25 @@ every level:
   convention (``("pod", "node", "gpu")`` = rank-major, pod most
   significant);
 * every level has a stable ``fingerprint()`` (hash of fabric kind +
-  config) so tuner plan cells can be keyed by (level, fabric) and a
-  plan tuned for one fabric never silently drives another.
+  config + shape) so tuner plan cells can be keyed by (level, fabric)
+  and a plan tuned for one fabric never silently drives another;
+* a level may carry a **shape vector** instead of a single radix
+  (``shape=(4, 2)``: the first outer group spans 4 ranks, the second
+  2).  Irregular (mixed fan-out) levels cannot be a regular mesh axis
+  of their own; they live on one *flat* mesh axis of ``sum(shape)``
+  ranks, and the Communicator decomposes collectives over that axis
+  into within-group schedules on this level's fabric plus a sub-root
+  exchange on the *parent* level's fabric
+  (``core.mesh_collectives`` grouped/ragged schedules).
 
 Spec formats (CLI ``--topology`` accepts either):
 
-* compact string: ``"pod:ib,node:cxl,gpu:ici"``;
+* compact string: ``"pod:ib,node:cxl,gpu:ici"``; an optional third
+  field declares the level shape - ``"node:cxl:4+2"`` (irregular
+  fan-out) or ``"gpu:ici:8"`` (declared size, single group);
 * JSON file: ``{"levels": [{"axis": "pod", "fabric": "ib",
-  "ib": {"link_bw": 5e10}}, ...]}`` where the per-fabric objects
+  "ib": {"link_bw": 5e10}}, {"axis": "node", "fabric": "cxl",
+  "shape": [4, 2]}, ...]}`` where the per-fabric objects
   override individual ``hw`` dataclass fields.
 
 The process-wide active topology (``set_active_topology``) is what a
@@ -62,12 +73,41 @@ class Level:
     #                                        alternative transport the
     #                                        tuner prices cxl against
     ici: Optional[ICIConfig] = None        # ici levels
+    # Shape vector: per-outer-group fan-out of this level.  None means
+    # the level is regular with its size taken from the mesh axis;
+    # ``(6,)`` declares the size (one group of 6); ``(4, 2)`` declares
+    # an irregular level - two groups under the parent level, one of 4
+    # ranks and one of 2, carried by a single flat mesh axis of 6.
+    shape: Optional[tuple] = None
 
     def __post_init__(self):
         if self.fabric not in FABRICS:
             raise ValueError(
                 f"level {self.axis!r}: fabric must be one of {FABRICS}, "
                 f"got {self.fabric!r}")
+        if self.shape is not None:
+            shape = tuple(int(g) for g in self.shape)
+            if not shape or any(g < 1 for g in shape):
+                raise ValueError(
+                    f"level {self.axis!r}: shape must be a non-empty "
+                    f"vector of positive group sizes, got {self.shape!r}")
+            object.__setattr__(self, "shape", shape)
+
+    @property
+    def size(self) -> Optional[int]:
+        """Total ranks this level spans (None when undeclared)."""
+        return sum(self.shape) if self.shape is not None else None
+
+    @property
+    def grouped(self) -> bool:
+        """True when the level decomposes a flat mesh axis into more
+        than one rank group (the ragged/hierarchical-on-one-axis case)."""
+        return self.shape is not None and len(self.shape) > 1
+
+    @property
+    def irregular(self) -> bool:
+        """True when the level's groups have mixed fan-out."""
+        return self.grouped and len(set(self.shape)) > 1
 
     @property
     def pool_cfg(self) -> CXLPoolConfig:
@@ -94,13 +134,21 @@ class Level:
             blob = _cfg_fingerprint("ib", self.ib_cfg)
         else:
             blob = _cfg_fingerprint("ici", self.ici_cfg)
+        # The shape vector is part of the hardware identity: plan cells
+        # tuned for a 4+2 level must not drive a 3+3 one.  Shapeless
+        # levels keep their pre-shape fingerprints (old plans load).
+        tag = self.fabric
+        if self.shape is not None:
+            tag += "[" + "+".join(str(g) for g in self.shape) + "]"
         return hashlib.sha256(
-            (self.fabric + ":" + blob).encode()).hexdigest()[:12]
+            (tag + ":" + blob).encode()).hexdigest()[:12]
 
     # -- serialization ----------------------------------------------------
 
     def to_json(self) -> dict:
         doc: dict = {"axis": self.axis, "fabric": self.fabric}
+        if self.shape is not None:
+            doc["shape"] = list(self.shape)
         for name in ("pool", "ib", "ici"):
             cfg = getattr(self, name)
             if cfg is not None:
@@ -110,6 +158,8 @@ class Level:
     @classmethod
     def from_json(cls, doc: dict) -> "Level":
         kw: dict = {}
+        if doc.get("shape") is not None:
+            kw["shape"] = tuple(int(g) for g in doc["shape"])
         for name, klass in (("pool", CXLPoolConfig),
                             ("ib", InfiniBandConfig), ("ici", ICIConfig)):
             if doc.get(name) is not None:
@@ -148,6 +198,15 @@ class Topology:
                 return i
         raise KeyError(axis)
 
+    def parent_of(self, axis: str) -> Optional[Level]:
+        """The level immediately outside ``axis`` (None at the
+        outermost).  For a grouped level this is the fabric the
+        cross-group sub-root exchange rides - e.g. a ``node`` level
+        with ``shape=(4, 2)`` under a ``pod:ib`` level sends its two
+        pod sums across IB."""
+        i = self.index_of(axis)
+        return self.levels[i - 1] if i > 0 else None
+
     def covers(self, axes: Sequence[str]) -> bool:
         return all(self.level_for(a) is not None for a in axes)
 
@@ -159,8 +218,15 @@ class Topology:
         return f"{i}:{self.levels[i].fingerprint()}"
 
     def fingerprint(self) -> str:
-        blob = "|".join(f"{lv.axis}={lv.fingerprint()}"
-                        for lv in self.levels)
+        """Hash of the ordered level fingerprints.  Deliberately
+        *excludes* axis names: a placement relabels levels with the
+        logical mesh axes it assigned to them (``tuner.placement``),
+        and a plan tuned against the physical topology must keep
+        matching the relabeled one - the hardware did not change.
+        (Pre-PR-5 fingerprints hashed the axis names too, so plans
+        cached by the old scheme regenerate once.)"""
+        blob = "|".join(f"{i}={lv.fingerprint()}"
+                        for i, lv in enumerate(self.levels))
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
     # -- serialization ----------------------------------------------------
@@ -176,7 +242,10 @@ class Topology:
 
 def parse_topology(spec: str) -> Topology:
     """Parse a CLI topology spec: a JSON file path or the compact
-    ``"axis:fabric,axis:fabric,..."`` string (outermost level first)."""
+    ``"axis:fabric[:shape],..."`` string (outermost level first).
+    The optional shape field is ``+``-separated group sizes:
+    ``"node:cxl:4+2"`` declares an irregular level of two groups
+    (4 and 2 ranks), ``"gpu:ici:8"`` just declares the size."""
     if os.path.exists(spec) or spec.endswith(".json"):
         with open(spec) as f:
             return Topology.from_json(json.load(f))
@@ -185,11 +254,13 @@ def parse_topology(spec: str) -> Topology:
         part = part.strip()
         if not part:
             continue
-        if ":" in part:
-            axis, fabric = (p.strip() for p in part.split(":", 1))
-        else:
-            axis, fabric = part, "cxl"
-        levels.append(Level(axis=axis, fabric=fabric))
+        fields = [p.strip() for p in part.split(":")]
+        axis = fields[0]
+        fabric = fields[1] if len(fields) > 1 and fields[1] else "cxl"
+        shape = None
+        if len(fields) > 2 and fields[2]:
+            shape = tuple(int(g) for g in fields[2].split("+"))
+        levels.append(Level(axis=axis, fabric=fabric, shape=shape))
     return Topology(levels=tuple(levels))
 
 

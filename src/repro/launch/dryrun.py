@@ -331,9 +331,13 @@ def build_lowerable(arch: str, shape_name: str, mesh, backend: str,
 def run_one(arch: str, shape_name: str, multi_pod: bool, backend: str,
             out_dir: str, mesh_shape: str = None,
             allreduce_mode: str = "two_phase",
-            bucket_mb: float = 25.0, prefetch: int = 1) -> dict:
+            bucket_mb: float = 25.0, prefetch: int = 1,
+            placement: str = None) -> dict:
     """``mesh_shape``: 'DPxTP' logical re-factorization of the single pod
-    (same 256 chips) - the §Perf mesh-reshape experiments."""
+    (same 256 chips) - the §Perf mesh-reshape experiments.
+    ``placement``: 'auto' or a placement JSON; with an active topology
+    the mesh is built from the planned axis->level assignment
+    (``tuner.placement``) and the ranked report lands in the record."""
     mesh_name = ("pod" + mesh_shape) if mesh_shape else (
         "pod2x16x16" if multi_pod else "pod16x16")
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
@@ -342,7 +346,31 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, backend: str,
            "status": "error"}
     t0 = time.time()
     try:
-        if mesh_shape:
+        if placement:
+            from repro import tuner
+            from repro.core.topology import get_active_topology
+            from repro.launch.mesh import make_placed_mesh
+            topo = get_active_topology()
+            if topo is None or not mesh_shape:
+                raise ValueError("--placement needs --topology and "
+                                 "--mesh-shape DPxTP")
+            dp_, tp_ = (int(x) for x in mesh_shape.split("x"))
+            info = SHAPES[shape_name]
+            mix = tuner.CollectiveMix.for_model(
+                get_config(arch), {"data": dp_, "model": tp_},
+                seq=info["seq_len"],
+                batch_per_rank=max(1, info["global_batch"] // dp_))
+            pplan = tuner.plan_placement(mix, topo) \
+                if placement == "auto" else \
+                tuner.load_placement(placement)
+            chosen = pplan.best_with_unsplit(("model",))
+            rec["placement"] = {
+                "chosen": chosen.to_json(),
+                "candidates": len(pplan.ranked),
+                "meta": pplan.meta}
+            print(tuner.format_report(pplan, chosen=chosen))
+            mesh = make_placed_mesh(chosen, mix, topo)
+        elif mesh_shape:
             dp_, tp_ = (int(x) for x in mesh_shape.split("x"))
             mesh = jax.make_mesh((dp_, tp_), ("data", "model"))
         elif os.environ.get("REPRO_DRYRUN_DEVICES"):
@@ -444,6 +472,11 @@ def main() -> None:
                          "and split ledger wire bytes per fabric")
     ap.add_argument("--mesh-shape", default=None,
                     help="DPxTP single-pod logical mesh override")
+    ap.add_argument("--placement", default=None,
+                    help="'auto' or a saved placement JSON: build the "
+                         "mesh from the planned axis->level assignment "
+                         "(tuner.placement; needs --topology and "
+                         "--mesh-shape) and record the ranked report")
     ap.add_argument("--allreduce-mode", default="two_phase",
                     choices=["two_phase", "faithful"])
     ap.add_argument("--bucket-mb", type=float, default=25.0,
@@ -475,7 +508,8 @@ def main() -> None:
                               mesh_shape=args.mesh_shape,
                               allreduce_mode=args.allreduce_mode,
                               bucket_mb=args.bucket_mb,
-                              prefetch=args.prefetch)
+                              prefetch=args.prefetch,
+                              placement=args.placement)
                 failures += rec["status"] != "ok"
     print(f"[dryrun] done; {failures} failures")
     raise SystemExit(1 if failures else 0)

@@ -3,6 +3,12 @@
 Defined as FUNCTIONS (not module constants) so importing this module
 never touches jax device state.  The production target is TPU v5e:
 one pod = 16x16 = 256 chips, multi-pod = 2 x 256 = 512.
+
+With ``--placement auto`` the launchers instead derive the mesh from a
+``tuner.placement.Placement``: one mesh axis per assigned level run
+(ordered outermost level first), logical names for single-level axes,
+level names + a ``models.sharding`` axis alias for split axes
+(``make_placed_mesh``).
 """
 from __future__ import annotations
 
@@ -20,7 +26,27 @@ def make_host_mesh(tp: int = 1, dp: int = 1):
     return jax.make_mesh((dp, tp), ("data", "model"))
 
 
+def make_placed_mesh(placement, mix, topology):
+    """Build the mesh a placement chose and activate everything it
+    needs: the axis aliases for split logical axes
+    (``sharding.set_axis_aliases``) and the placed (relabeled)
+    topology as the process-wide active one.  Returns the mesh."""
+    from repro.core.topology import set_active_topology
+    from repro.models import sharding
+    from repro.tuner.placement import mesh_spec, placed_topology
+    shape, names, aliases = mesh_spec(placement, mix, topology)
+    mesh = jax.make_mesh(shape, names)
+    sharding.set_axis_aliases(aliases)
+    set_active_topology(placed_topology(placement, topology))
+    return mesh
+
+
 def dp_axes(mesh) -> tuple:
-    """The data-parallel axis spec for a mesh (hierarchical when the pod
-    axis exists)."""
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    """The data-parallel axis spec for a mesh: the placement alias for
+    ``data`` when one is installed, else hierarchical ``(pod, data)``
+    when the pod axis exists."""
+    from repro.models import sharding
+    data = sharding.resolve_axis("data")
+    if isinstance(data, tuple):
+        return data
+    return ("pod", "data") if "pod" in mesh.axis_names else (data,)

@@ -49,6 +49,19 @@ def main() -> None:
     ap.add_argument("--plan-out", default=None,
                     help="persist the measurement-refined plan "
                          "(format v4) here at the end of the run")
+    ap.add_argument("--topology", default=None,
+                    help="'axis:fabric[:shape],...' spec or topology "
+                         "JSON file to activate for this process")
+    ap.add_argument("--placement", default=None,
+                    help="'auto' or a saved placement JSON: rank the "
+                         "mesh-axis -> fabric-level assignments for "
+                         "this arch (tuner.placement), print the "
+                         "report, and activate the placed topology + "
+                         "axis aliases (takes effect when serving "
+                         "sharded); needs a topology")
+    ap.add_argument("--placement-axes", default="data=2,model=4",
+                    help="logical axis degrees for --placement, "
+                         "'name=size,...'")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-step", type=int, default=None)
     args = ap.parse_args()
@@ -56,6 +69,31 @@ def main() -> None:
         ap.error("--online-retune requires --plan")
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.topology:
+        from repro.core.topology import (parse_topology,
+                                         set_active_topology)
+        set_active_topology(parse_topology(args.topology))
+    if args.placement:
+        from repro import tuner
+        from repro.core.topology import (get_active_topology,
+                                         set_active_topology)
+        from repro.models import sharding
+        topo = get_active_topology()
+        if topo is None:
+            ap.error("--placement requires --topology")
+        axes = {k: int(v) for k, v in
+                (p.split("=") for p in args.placement_axes.split(","))}
+        mix = tuner.CollectiveMix.for_model(cfg, axes,
+                                            seq=args.prompt_len
+                                            + args.new_tokens)
+        pplan = tuner.plan_placement(mix, topo) \
+            if args.placement == "auto" \
+            else tuner.load_placement(args.placement)
+        chosen = pplan.best_with_unsplit(("model",))
+        print(tuner.format_report(pplan, chosen=chosen))
+        _, _, aliases = tuner.mesh_spec(chosen, mix, topo)
+        sharding.set_axis_aliases(aliases)
+        set_active_topology(tuner.placed_topology(chosen, topo))
     params = model.init_params(jax.random.key(0), cfg, tp=1,
                                dtype=jnp.float32)
     if args.ckpt:

@@ -75,6 +75,14 @@ def main() -> None:
     ap.add_argument("--mesh", default=None,
                     help="DPxTP, e.g. 2x4; default: production mesh")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--placement", default=None,
+                    help="'auto' (plan the mesh-axis -> fabric-level "
+                         "assignment from the model's analytic "
+                         "collective mix, tuner.placement) or a saved "
+                         "placement JSON; needs an active topology "
+                         "(--topology or a topology plan) and --mesh "
+                         "for the DP/TP degrees.  Applies the best "
+                         "assignment that keeps the TP axis unsplit")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     if args.online_retune and args.backend != "auto":
@@ -92,7 +100,27 @@ def main() -> None:
         from repro.tuner import activate_plan_file
         activate_plan_file(args.plan, pool=CXL_POOL, ib=INFINIBAND)
     cfg = get_config(args.arch, smoke=args.smoke)
-    if args.mesh:
+    if args.placement:
+        from repro import tuner
+        from repro.launch.mesh import make_placed_mesh
+        topo = get_active_topology()
+        if topo is None:
+            ap.error("--placement requires an active topology "
+                     "(--topology or a topology plan)")
+        if not args.mesh:
+            ap.error("--placement requires --mesh DPxTP for the "
+                     "logical axis degrees")
+        dp, tp = (int(x) for x in args.mesh.split("x"))
+        mix = tuner.CollectiveMix.for_model(
+            cfg, {"data": dp, "model": tp}, seq=args.seq,
+            batch_per_rank=max(1, args.batch // max(1, dp)))
+        pplan = tuner.plan_placement(mix, topo) \
+            if args.placement == "auto" \
+            else tuner.load_placement(args.placement)
+        chosen = pplan.best_with_unsplit(("model",))
+        print(tuner.format_report(pplan, chosen=chosen))
+        mesh = make_placed_mesh(chosen, mix, topo)
+    elif args.mesh:
         dp, tp = (int(x) for x in args.mesh.split("x"))
         mesh = jax.make_mesh((dp, tp), ("data", "model"))
     else:

@@ -95,6 +95,19 @@ def main() -> None:
                          "the swept plan (tuner.online), emitting a "
                          "format-v4 plan whose measured cells override "
                          "the oracle")
+    ap.add_argument("--placement-report", default=None, metavar="ARCH",
+                    help="with --topology: rank the mesh-axis -> "
+                         "fabric-level assignments for this arch's "
+                         "analytic collective mix (tuner.placement), "
+                         "print the table, and embed the ranked "
+                         "PlacementPlan in the plan metadata "
+                         "(Plan.placement())")
+    ap.add_argument("--placement-axes", default=None,
+                    help="logical axis degrees for the report, "
+                         "'name=size,...' (default: derived from the "
+                         "declared level sizes - innermost placeable "
+                         "level is the model axis, the rest multiply "
+                         "into the data axis)")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
 
@@ -143,6 +156,32 @@ def main() -> None:
                        for c in plan.entries.values())
         print(f"folded {len(timings)} measured samples into "
               f"{measured} cells")
+    if args.placement_report:
+        if topology is None:
+            ap.error("--placement-report requires --topology")
+        from repro.configs import get_config
+        cfg = get_config(args.placement_report)
+        if args.placement_axes:
+            axes = {k: int(v) for k, v in
+                    (p.split("=") for p in
+                     args.placement_axes.split(","))}
+        else:
+            lvs = topology.levels
+            placeable = [lv for i, lv in enumerate(lvs)
+                         if not (i + 1 < len(lvs)
+                                 and lvs[i + 1].grouped)]
+            sizes = [lv.size for lv in placeable]
+            if any(s is None for s in sizes):
+                ap.error("--placement-report needs --placement-axes "
+                         "when topology level sizes are undeclared")
+            data = 1
+            for s in sizes[:-1]:
+                data *= s
+            axes = {"data": data, "model": sizes[-1]}
+        mix = tuner.CollectiveMix.for_model(cfg, axes)
+        pplan = tuner.plan_placement(mix, topology)
+        print(tuner.format_report(pplan))
+        plan.meta["placement"] = pplan.to_json()
     dt = time.time() - t0
 
     out = args.out or tuner.default_plan_path(topology=topology)

@@ -27,6 +27,45 @@ from repro.models.pcontext import ParallelContext
 
 FSDP_MIN_SIZE = 65536
 
+# -- axis-name indirection (tuner.placement) -------------------------------
+# Model code and the spec tables below speak *logical* axis names
+# ("model", "data").  A placement may bind a logical axis to
+# differently-named mesh axes - in particular, split one logical axis
+# across adjacent fabric levels, each a mesh axis of its own.  The
+# alias registry maps logical -> mesh axes at spec-construction time so
+# a placement can relabel the mesh without touching model code.
+
+_AXIS_ALIASES: dict = {}
+
+
+def set_axis_aliases(aliases: dict) -> None:
+    """Install the placement's logical->mesh axis map, e.g.
+    ``{"data": ("pod", "node")}``.  Values are a mesh axis name or a
+    tuple of them (outermost first, the rank-major convention)."""
+    _AXIS_ALIASES.clear()
+    _AXIS_ALIASES.update(aliases)
+
+
+def clear_axis_aliases() -> None:
+    _AXIS_ALIASES.clear()
+
+
+def resolve_axis(axis):
+    """Map a logical axis spec (name or tuple of names) through the
+    alias registry, flattening tuple-valued aliases.  Unaliased names
+    pass through, so callers can resolve unconditionally."""
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        out: list = []
+        for a in axis:
+            r = _AXIS_ALIASES.get(a, a)
+            out.extend(r) if isinstance(r, (tuple, list)) else \
+                out.append(r)
+        return tuple(out)
+    r = _AXIS_ALIASES.get(axis, axis)
+    return tuple(r) if isinstance(r, (tuple, list)) else r
+
 # leaf name -> dim sharded over the model axis (None = replicated)
 TP_DIM = {
     "wq": 1, "wk": 1, "wv": 1, "wo": 0,
@@ -68,8 +107,11 @@ def param_specs(params: Any, cfg, *, model_axis: str = "model",
                 dp_axis: Union[str, tuple, None] = None,
                 fsdp: bool = True) -> Any:
     """PartitionSpec pytree matching ``params`` (arrays or
-    ShapeDtypeStructs)."""
-    dp_size = None  # divisibility is checked against shapes at use time
+    ShapeDtypeStructs).  Axis names resolve through the placement
+    alias registry (``set_axis_aliases``) first, so specs built with
+    the logical names land on the mesh axes the placement chose."""
+    model_axis = resolve_axis(model_axis)
+    dp_axis = resolve_axis(dp_axis)
 
     def spec_for(path, leaf) -> P:
         names = _path_names(path)
@@ -99,6 +141,11 @@ def param_specs(params: Any, cfg, *, model_axis: str = "model",
         return P(*dims)
 
     def _infer_tp() -> int:
+        if isinstance(model_axis, tuple):
+            n = 1
+            for a in model_axis:
+                n *= _MESH_SIZES.get(a, 1)
+            return n
         return _MESH_SIZES.get(model_axis, 1)
 
     def _dp_size() -> int:

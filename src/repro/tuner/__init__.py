@@ -22,12 +22,29 @@ them into the plan as per-cell EWMAs (``tuner.online``), and hot-swaps
 the refreshed plan through the epoch-versioned active-plan registry at
 ``--retune-interval`` boundaries; ``--plan-out`` persists the refined
 (format v4) plan for the next run.
+
+``tuner.placement`` chooses the mesh-axis -> fabric-level assignment
+itself: ``plan_placement(CollectiveMix, Topology)`` ranks every
+feasible assignment (axis splits across adjacent levels, irregular
+shape-vector levels priced by their grouped decomposition) by
+predicted exposed step time, and launchers apply the winner with
+``--placement auto`` (``tune --placement-report`` embeds the ranked
+table in the plan metadata, ``Plan.placement()`` reads it back).
+
+See ``docs/API.md`` for the public-surface reference and
+``docs/ARCHITECTURE.md`` for how the pieces fit.
 """
 from repro.tuner.costmodel import (ici_time, predict_exposed_time,
                                    predict_level_time, predict_time,
                                    roofline_compute_time)
 from repro.tuner.online import (OnlineTuner, choices_changed,
                                 fold_measurements)
+from repro.tuner.placement import (AxisTraffic, CollectiveCall,
+                                   CollectiveMix, Placement,
+                                   PlacementPlan, format_report,
+                                   load_placement, mesh_spec,
+                                   placed_topology, plan_placement,
+                                   save_placement)
 from repro.tuner.plan import (Choice, Plan, PlanVersionError,
                               hardware_fingerprint, load_plan, save_plan,
                               size_bucket)
@@ -51,4 +68,7 @@ __all__ = [
     "get_active_plan", "get_active_plan_versioned", "plan_epoch",
     "set_active_plan",
     "OnlineTuner", "choices_changed", "fold_measurements",
+    "AxisTraffic", "CollectiveCall", "CollectiveMix", "Placement",
+    "PlacementPlan", "plan_placement", "placed_topology", "mesh_spec",
+    "format_report", "save_placement", "load_placement",
 ]

@@ -116,6 +116,17 @@ PlanKey = tuple  # (primitive, bucket, nranks) or (..., level)
 
 @dataclasses.dataclass
 class Plan:
+    """The persisted product of a tuning sweep: a mapping from
+    ``(primitive, log2-size bucket, nranks[, level key])`` to the
+    :class:`Choice` the cost model picked, plus the hardware
+    ``fingerprint`` it was tuned for and free-form ``meta`` (the grid,
+    the embedded topology for per-level plans, the overlap objective,
+    an optional placement report).  Build one with
+    ``tuner.generate_plan``; persist with ``save_plan`` /
+    ``load_plan``; serve it process-wide with
+    ``tuner.activate_plan_file`` so ``Communicator(backend='auto')``
+    resolves against it at trace time."""
+
     fingerprint: str
     entries: dict = dataclasses.field(default_factory=dict)  # key -> Choice
     meta: dict = dataclasses.field(default_factory=dict)
@@ -135,6 +146,17 @@ class Plan:
         """The Topology this plan was tuned for (None for flat plans)."""
         doc = self.meta.get("topology")
         return Topology.from_json(doc) if doc else None
+
+    def placement(self):
+        """The ranked ``tuner.placement.PlacementPlan`` embedded by
+        ``launch/tune --placement-report`` (None when the plan was
+        tuned without one).  Lives in ``meta`` so one JSON file carries
+        sweep + topology + placement through ``tune -> train``."""
+        doc = self.meta.get("placement")
+        if not doc:
+            return None
+        from repro.tuner.placement import PlacementPlan
+        return PlacementPlan.from_json(doc)
 
     def levels(self) -> tuple:
         """Distinct level keys appearing in the plan's cells."""

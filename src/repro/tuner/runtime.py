@@ -73,6 +73,13 @@ def activate_plan_file(path: str, *,
                        pool: Optional[CXLPoolConfig] = None,
                        ib: Optional[InfiniBandConfig] = None,
                        topology: Optional[Topology] = None) -> Plan:
+    """Load a plan file, fingerprint-check it against the given
+    hardware (``pool``/``ib`` for flat plans, ``topology`` for
+    per-level ones), publish it as the process-wide active plan, and
+    activate its embedded topology when no explicit one is set - the
+    single call that wires ``tune -> train`` together.  Returns the
+    activated Plan; raises ``ValueError`` on a fingerprint mismatch
+    and ``PlanVersionError`` on an unreadable format."""
     plan = load_plan(path, pool=pool, ib=ib, topology=topology)
     set_active_plan(plan)
     topo = plan.topology()

@@ -107,6 +107,22 @@ def _window(overlap_compute: OverlapCompute, prim: str, size: int,
     return max(0.0, float(overlap_compute or 0.0))
 
 
+def _level_nranks(grid: TuneGrid, topology: Topology, i: int) -> tuple:
+    """The rank counts to sweep for level ``i``: the grid's, plus the
+    sizes a shaped level actually runs at - its distinct group sizes
+    (within-group schedules) and, when the *next* level is grouped,
+    its group count (the sub-root exchange rides this level)."""
+    extra = set()
+    lv = topology.levels[i]
+    if lv.shape is not None:
+        extra |= set(lv.shape)
+        if lv.grouped:
+            extra.add(len(lv.shape))
+    if i + 1 < len(topology.levels) and topology.levels[i + 1].grouped:
+        extra.add(len(topology.levels[i + 1].shape))
+    return tuple(sorted(set(grid.nranks) | {n for n in extra if n >= 2}))
+
+
 def generate_plan(grid: TuneGrid = DEFAULT_GRID, *,
                   pool: CXLPoolConfig = CXL_POOL,
                   ib: InfiniBandConfig = INFINIBAND,
@@ -121,9 +137,13 @@ def generate_plan(grid: TuneGrid = DEFAULT_GRID, *,
     (level index, fabric fingerprint) and priced against that level's
     own fabric config (``costmodel.predict_level_time``), with the
     candidate set restricted to the backends the fabric can execute.
-    The topology is embedded in the plan metadata and its fingerprint
-    becomes the plan fingerprint, so ``tune -> train`` round-trips
-    through one JSON file.
+    Shaped levels extend their swept rank counts with the sizes they
+    actually run at (distinct group sizes; the group count lands on
+    the parent level, which carries the sub-root exchange), so ragged
+    lookups resolve exactly instead of falling to the nearest tuned
+    nranks.  The topology is embedded in the plan metadata and its
+    fingerprint becomes the plan fingerprint, so ``tune -> train``
+    round-trips through one JSON file.
     """
     overlap_meta = ("per-cell" if callable(overlap_compute)
                     else float(overlap_compute or 0.0))
@@ -151,8 +171,9 @@ def generate_plan(grid: TuneGrid = DEFAULT_GRID, *,
                 meta={"grid": dataclasses.asdict(grid),
                       "overlap_compute_s": overlap_meta,
                       "topology": topology.to_json()})
-    for level in topology.levels:
+    for i, level in enumerate(topology.levels):
         lkey = topology.level_key(level.axis)
+        level_nranks = _level_nranks(grid, topology, i)
 
         def cost(backend, prim, n, size, factor, mode, _lv=level):
             return costmodel.predict_level_time(
@@ -160,7 +181,7 @@ def generate_plan(grid: TuneGrid = DEFAULT_GRID, *,
                 slicing_factor=factor, allreduce_mode=mode)
 
         for prim in grid.primitives:
-            for n in grid.nranks:
+            for n in level_nranks:
                 for size in grid.sizes:
                     w = _window(overlap_compute, prim, size, n)
                     plan.add(prim, size, n, _tune_cell(

@@ -1,0 +1,298 @@
+"""tuner.placement: the topology-aware placement planner, irregular
+(shape-vector) levels, and the axis-alias indirection that applies a
+placement without touching model code."""
+import json
+
+import pytest
+
+from repro import tuner
+from repro.core.hw import MiB, CXLPoolConfig, ICIConfig, InfiniBandConfig
+from repro.core.topology import (Level, Topology, clear_active_topology,
+                                 parse_topology)
+from repro.models import sharding
+from repro.tuner import placement as pl
+
+SLOW_IB = InfiniBandConfig(link_bw=2.5e9)
+POOL = CXLPoolConfig(device_bw=18e9)
+FAST_ICI = ICIConfig(link_bw=45e9)
+
+TOPO = Topology(levels=(
+    Level("pod", "ib", ib=SLOW_IB, shape=(2,)),
+    Level("node", "cxl", pool=POOL, shape=(2,)),
+    Level("gpu", "ici", ici=FAST_ICI, shape=(4,)),
+))
+
+RAGGED = Topology(levels=(
+    Level("pod", "ib", ib=SLOW_IB),
+    Level("node", "cxl", pool=POOL, shape=(4, 2)),
+    Level("gpu", "ici", ici=FAST_ICI, shape=(6,)),
+))
+
+
+def heavy_tp_mix(tp=4, dp=4):
+    """A mix whose TP axis dominates: the planner must put it on the
+    fastest level under any sane oracle."""
+    return pl.CollectiveMix(axes=(
+        pl.AxisTraffic("model", tp, (
+            pl.CollectiveCall("all_reduce", 64 * MiB, calls=100.0),)),
+        pl.AxisTraffic("data", dp, (
+            pl.CollectiveCall("all_gather", 4 * MiB, calls=4.0),)),
+    ))
+
+
+# -- shape-vector levels ---------------------------------------------------
+
+def test_level_shape_validation_and_props():
+    lv = Level("node", "cxl", shape=(4, 2))
+    assert lv.size == 6 and lv.grouped and lv.irregular
+    assert Level("gpu", "ici", shape=(8,)).size == 8
+    assert not Level("gpu", "ici", shape=(8,)).grouped
+    assert Level("n", "cxl", shape=(3, 3)).grouped
+    assert not Level("n", "cxl", shape=(3, 3)).irregular
+    assert Level("n", "cxl").size is None
+    with pytest.raises(ValueError):
+        Level("n", "cxl", shape=())
+    with pytest.raises(ValueError):
+        Level("n", "cxl", shape=(4, 0))
+
+
+def test_shape_in_fingerprint_and_parse():
+    base = Level("n", "cxl")
+    assert base.fingerprint() != Level("n", "cxl",
+                                       shape=(4, 2)).fingerprint()
+    assert Level("n", "cxl", shape=(4, 2)).fingerprint() != \
+        Level("n", "cxl", shape=(3, 3)).fingerprint()
+    t = parse_topology("pod:ib,node:cxl:4+2,gpu:ici:8")
+    assert t.level_for("node").shape == (4, 2)
+    assert t.level_for("gpu").shape == (8,)
+    assert t.level_for("pod").shape is None
+    assert t.parent_of("node").axis == "pod"
+    assert t.parent_of("pod") is None
+
+
+def test_topology_fingerprint_ignores_axis_names():
+    """Placement relabels levels with logical axis names; the
+    fingerprint must survive so tuned plans keep matching."""
+    a = Topology(levels=(Level("pod", "ib"), Level("node", "cxl")))
+    b = Topology(levels=(Level("data", "ib"), Level("model", "cxl")))
+    assert a.fingerprint() == b.fingerprint()
+    # order still matters
+    c = Topology(levels=(Level("x", "cxl"), Level("y", "ib")))
+    assert a.fingerprint() != c.fingerprint()
+
+
+def test_irregular_level_roundtrip_through_plan_save_load(tmp_path):
+    """A ragged topology embedded in a tuned plan survives
+    save -> load with its shape vector and fingerprint intact."""
+    grid = tuner.TuneGrid(primitives=("all_reduce",), sizes=(1 * MiB,),
+                          nranks=(3,), slicing_factors=(4,))
+    plan = tuner.generate_plan(grid, topology=RAGGED)
+    path = str(tmp_path / "ragged.json")
+    tuner.save_plan(plan, path)
+    loaded = tuner.load_plan(path, topology=RAGGED)
+    topo = loaded.topology()
+    assert topo.level_for("node").shape == (4, 2)
+    assert topo.level_for("node").irregular
+    assert topo.fingerprint() == RAGGED.fingerprint()
+    # the sweep tuned the ragged level at its real group sizes and the
+    # parent at the group count (sub-root exchange)
+    node_n = {k[2] for k in loaded.entries
+              if k[3] == RAGGED.level_key("node")}
+    pod_n = {k[2] for k in loaded.entries
+             if k[3] == RAGGED.level_key("pod")}
+    assert {2, 4} <= node_n
+    assert 2 in pod_n
+
+
+# -- the planner -----------------------------------------------------------
+
+def test_planner_picks_known_best_under_skewed_oracle():
+    """With TP traffic dominating, the planner must land the TP axis
+    on the fast ICI level and the FSDP axis on the pod+node split -
+    and rank the swapped (naive) assignment strictly worse."""
+    plan = pl.plan_placement(heavy_tp_mix(), TOPO)
+    best = plan.best
+    assert best.levels_for("model") == ("gpu",)
+    assert best.levels_for("data") == ("pod", "node")
+    naive = plan.find({"model": ("pod", "node"), "data": "gpu"})
+    assert naive is not None
+    assert naive.predicted_exposed_s > best.predicted_exposed_s
+    assert best is plan.best_with_unsplit(("model",))
+    assert "data" in best.split_axes and "model" not in best.split_axes
+
+
+def test_planner_infeasible_and_size_checks():
+    mix = pl.CollectiveMix(axes=(
+        pl.AxisTraffic("model", 5, (
+            pl.CollectiveCall("all_reduce", MiB),)),))
+    with pytest.raises(ValueError, match="no feasible"):
+        pl.plan_placement(mix, TOPO)    # no level of size 5
+    # undeclared level sizes accept any degree
+    topo = Topology(levels=(Level("a", "ib"), Level("b", "ici")))
+    plan = pl.plan_placement(mix, topo)
+    assert plan.best.levels_for("model") in (("a",), ("b",))
+
+
+def test_planner_ragged_pricing_prefers_pool_over_flat_ib():
+    """On the ragged topology the grouped decomposition must price the
+    big AllReduce below the flat cross-pod IB ring, steering TP away
+    from the ragged level only when the alternative is faster."""
+    node, pod = RAGGED.level_for("node"), RAGGED.level_for("pod")
+    ragged = pl._ragged_call_time(node, pod, "all_reduce", 64 * MiB)
+    flat = pl._best_level_time(pod, "all_reduce", 6, 64 * MiB)
+    assert 0 < ragged < flat
+    plan = pl.plan_placement(heavy_tp_mix(tp=6, dp=6), RAGGED)
+    assert plan.best.levels_for("model") == ("gpu",)
+    # the absorbed pod level (parent of the ragged node) never takes
+    # an axis of its own
+    for p in plan.ranked:
+        for _, levels in p.assignment:
+            assert "pod" not in levels
+
+
+def test_best_with_unsplit_raises_when_only_splits_fit():
+    """A placement whose TP axis spans two levels cannot be applied
+    (the mesh would lack the model axis): best_with_unsplit must
+    refuse loudly instead of handing back a split assignment."""
+    topo = Topology(levels=(Level("pod", "ib", shape=(2,)),
+                            Level("node", "cxl", shape=(2,))))
+    mix = pl.CollectiveMix(axes=(
+        pl.AxisTraffic("model", 4, (
+            pl.CollectiveCall("all_reduce", MiB),)),))
+    plan = pl.plan_placement(mix, topo)   # only pod+node fits model=4
+    assert plan.best.levels_for("model") == ("pod", "node")
+    with pytest.raises(ValueError, match="splits"):
+        plan.best_with_unsplit(("model",))
+    # report marks the actually-applied candidate, not always rank #0
+    rep = pl.format_report(plan, chosen=plan.best)
+    assert "chosen" in rep
+
+
+def test_overlap_window_reduces_exposed_time():
+    call = pl.CollectiveCall("all_gather", 16 * MiB, calls=2.0,
+                             overlap_s=1e9)  # absurdly large window
+    mix = pl.CollectiveMix(axes=(
+        pl.AxisTraffic("data", 4, (call,)),
+        pl.AxisTraffic("model", 4, (
+            pl.CollectiveCall("all_reduce", MiB),)),))
+    plan = pl.plan_placement(mix, TOPO)
+    assert dict(plan.best.per_axis_s)["data"] == 0.0
+
+
+def test_placement_plan_json_roundtrip(tmp_path):
+    plan = pl.plan_placement(heavy_tp_mix(), TOPO)
+    path = str(tmp_path / "placement.json")
+    pl.save_placement(plan, path)
+    again = pl.load_placement(path)
+    assert again.best.assignment == plan.best.assignment
+    assert again.best.predicted_exposed_s == pytest.approx(
+        plan.best.predicted_exposed_s)
+    assert again.topology.fingerprint() == TOPO.fingerprint()
+    # the doc is plain JSON (CI artifacts, plan meta embedding)
+    json.dumps(plan.to_json())
+
+
+def test_placement_embeds_in_plan_meta():
+    grid = tuner.TuneGrid(primitives=("all_reduce",), sizes=(1 * MiB,),
+                          nranks=(2,), slicing_factors=(4,))
+    plan = tuner.generate_plan(grid, topology=TOPO)
+    assert plan.placement() is None
+    pplan = pl.plan_placement(heavy_tp_mix(), TOPO)
+    plan.meta["placement"] = pplan.to_json()
+    again = tuner.Plan.from_json(plan.to_json())
+    assert again.placement().best.assignment == pplan.best.assignment
+
+
+def test_mix_for_model_shapes():
+    from repro.configs import get_config
+    cfg = get_config("llama3-8b")
+    mix = pl.CollectiveMix.for_model(cfg, {"data": 4, "model": 8})
+    data, model = mix.axis("data"), mix.axis("model")
+    assert {c.primitive for c in model.calls} == {"all_reduce"}
+    assert {c.primitive for c in data.calls} == {"all_gather",
+                                                 "reduce_scatter"}
+    # gathers are overlappable (prefetch), grad RS is not
+    ag = next(c for c in data.calls if c.primitive == "all_gather")
+    rs = next(c for c in data.calls if c.primitive == "reduce_scatter")
+    assert ag.overlap_s > 0.0 and rs.overlap_s == 0.0
+    assert data.bytes_per_step > 0 and model.bytes_per_step > 0
+    # size-1 axes ride along traffic-free
+    mix1 = pl.CollectiveMix.for_model(cfg, {"data": 4, "model": 1})
+    assert mix1.axis("model").calls == ()
+    with pytest.raises(ValueError):
+        pl.CollectiveMix.for_model(cfg, {"data": 1, "model": 1})
+
+
+def test_mix_from_dryrun_record():
+    rec = {"ledger": {"auto_choices": [
+        {"primitive": "all_reduce", "msg_bytes": 1024, "nranks": 4,
+         "calls": 32.0, "level": "model"},
+        {"primitive": "all_gather", "msg_bytes": 2048, "nranks": 2,
+         "calls": 8.0, "level": None},
+    ]}}
+    mix = pl.CollectiveMix.from_dryrun(rec, axis_sizes={"data": 2,
+                                                        "model": 4})
+    assert mix.axis("model").calls[0].calls == 32.0
+    assert mix.axis("data").calls[0].primitive == "all_gather"
+    with pytest.raises(ValueError):
+        pl.CollectiveMix.from_dryrun({"ledger": {}})
+
+
+# -- applying a placement --------------------------------------------------
+
+def test_placed_topology_and_mesh_spec():
+    mix = heavy_tp_mix()
+    plan = pl.plan_placement(mix, TOPO)
+    best = plan.best            # data->pod+node, model->gpu
+    placed = pl.placed_topology(best, TOPO)
+    # single-level run renamed to the logical axis; split keeps the
+    # physical level names; fingerprint survives relabeling
+    assert placed.axes == ("pod", "node", "model")
+    assert placed.fingerprint() == TOPO.fingerprint()
+    shape, names, aliases = pl.mesh_spec(best, mix, TOPO)
+    assert names == ("pod", "node", "model")
+    assert shape == (2, 2, 4)
+    assert aliases == {"data": ("pod", "node")}
+
+
+def test_mesh_spec_appends_size1_axes():
+    from repro.configs import get_config
+    cfg = get_config("llama3-8b")
+    mix = pl.CollectiveMix.for_model(cfg, {"data": 4, "model": 1})
+    topo = Topology(levels=(Level("pod", "ib", shape=(2,)),
+                            Level("node", "cxl", shape=(2,))))
+    plan = pl.plan_placement(mix, topo)
+    shape, names, aliases = pl.mesh_spec(plan.best, mix, topo)
+    assert names[-1] == "model" and shape[-1] == 1
+    assert set(names) == {"pod", "node", "model"}
+
+
+def test_sharding_axis_aliases():
+    try:
+        sharding.set_axis_aliases({"data": ("pod", "node")})
+        assert sharding.resolve_axis("data") == ("pod", "node")
+        assert sharding.resolve_axis("model") == "model"
+        assert sharding.resolve_axis(("pod", "data")) == \
+            ("pod", "pod", "node")  # tuples flatten through aliases
+        assert sharding.resolve_axis(None) is None
+        sharding.set_mesh_sizes({"pod": 2, "node": 2, "model": 4})
+        import jax.numpy as jnp
+
+        class _Cfg:
+            @staticmethod
+            def kv_sharded(tp):
+                return True
+        params = {"big": jnp.zeros((256, 512), jnp.float32)}
+        specs = sharding.param_specs(params, _Cfg, dp_axis="data",
+                                     fsdp=True)
+        assert sharding._has_axis(specs["big"],
+                                  ("pod", "node")) is not None
+    finally:
+        sharding.clear_axis_aliases()
+        clear_active_topology()
+
+
+def test_format_report_names_the_winner():
+    plan = pl.plan_placement(heavy_tp_mix(), TOPO)
+    rep = pl.format_report(plan)
+    assert "chosen" in rep and plan.best.describe() in rep

@@ -1,0 +1,171 @@
+"""Docs CI: documented commands must not rot.
+
+Two checks, run from the repo root (the CI ``docs`` job):
+
+1. **Snippet execution** - every fenced ````bash`/`python` block in
+   README.md and EXPERIMENTS.md is executed against the repo (the
+   quickstart/workflow blocks are written with ``--smoke`` configs, so
+   this is minutes, not hours).  Blocks whose fence uses any other
+   info string (```` ``` ````, ```json, ```text) are prose, not
+   contracts, and are skipped; a block annotated with an HTML comment
+   ``<!-- docs-check: skip ... -->`` on the line above its fence is
+   skipped too (used for the full tier-1 suite, which CI already runs
+   as its own job).
+2. **Link check** - every relative markdown link target in the repo's
+   ``*.md`` files (top level + ``docs/``) must exist.  External
+   ``http(s)``/``mailto`` links and pure anchors are not checked (no
+   network in CI).
+
+Usage::
+
+    python tools/check_docs.py [--only-links] [--only-snippets] [-v]
+
+Exit status 1 when any snippet fails or any link dangles.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import subprocess
+import sys
+import tempfile
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SNIPPET_FILES = ("README.md", "EXPERIMENTS.md")
+LINK_GLOBS = ("*.md", "docs/*.md")
+SKIP_MARK = "docs-check: skip"
+TIMEOUT_S = 1800
+
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def extract_snippets(path: str) -> list:
+    """[(lang, first line number, code)] for runnable fenced blocks."""
+    out = []
+    with open(path) as f:
+        lines = f.read().splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE_RE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        lang = m.group(1).lower()
+        body = []
+        start = i + 1
+        i += 1
+        while i < len(lines) and not lines[i].startswith("```"):
+            body.append(lines[i])
+            i += 1
+        i += 1  # closing fence
+        if lang not in ("bash", "sh", "python"):
+            continue
+        # a skip marker on the (non-empty) line above the fence
+        above = ""
+        for j in range(start - 2, -1, -1):
+            if lines[j].strip():
+                above = lines[j]
+                break
+        if SKIP_MARK in above:
+            continue
+        out.append((lang, start, "\n".join(body)))
+    return out
+
+
+def run_snippet(lang: str, code: str, verbose: bool) -> tuple:
+    """(ok, seconds, output tail)."""
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src:.")
+    t0 = time.time()
+    try:
+        if lang == "python":
+            with tempfile.NamedTemporaryFile("w", suffix=".py",
+                                             delete=False) as f:
+                f.write(code)
+                tmp = f.name
+            try:
+                proc = subprocess.run(
+                    [sys.executable, tmp], cwd=ROOT, env=env,
+                    capture_output=True, text=True, timeout=TIMEOUT_S)
+            finally:
+                os.unlink(tmp)
+        else:
+            proc = subprocess.run(
+                ["bash", "-e", "-c", code], cwd=ROOT, env=env,
+                capture_output=True, text=True, timeout=TIMEOUT_S)
+        ok = proc.returncode == 0
+        tail = ((proc.stdout or "") + (proc.stderr or ""))[-2000:]
+    except subprocess.TimeoutExpired:
+        ok, tail = False, f"timeout after {TIMEOUT_S}s"
+    dt = time.time() - t0
+    if verbose and tail:
+        print(tail)
+    return ok, dt, tail
+
+
+def check_snippets(verbose: bool) -> int:
+    failures = 0
+    for name in SNIPPET_FILES:
+        path = os.path.join(ROOT, name)
+        if not os.path.exists(path):
+            print(f"[docs] MISSING {name}")
+            failures += 1
+            continue
+        for lang, line, code in extract_snippets(path):
+            head = code.strip().splitlines()[0] if code.strip() else ""
+            print(f"[docs] run {name}:{line} ({lang}) {head[:60]}")
+            ok, dt, tail = run_snippet(lang, code, verbose)
+            if ok:
+                print(f"[docs]   ok ({dt:.1f}s)")
+            else:
+                failures += 1
+                print(f"[docs]   FAIL ({dt:.1f}s)\n{tail}")
+    return failures
+
+
+def check_links() -> int:
+    failures = 0
+    md_files = []
+    for pat in LINK_GLOBS:
+        md_files.extend(sorted(glob.glob(os.path.join(ROOT, pat))))
+    for path in md_files:
+        base = os.path.dirname(path)
+        rel = os.path.relpath(path, ROOT)
+        with open(path) as f:
+            text = f.read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:",
+                                  "#")):
+                continue
+            plain = target.split("#", 1)[0]
+            if not plain:
+                continue
+            if not os.path.exists(os.path.join(base, plain)):
+                failures += 1
+                print(f"[docs] dangling link in {rel}: {target}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only-links", action="store_true")
+    ap.add_argument("--only-snippets", action="store_true")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args()
+    failures = 0
+    if not args.only_snippets:
+        failures += check_links()
+    if not args.only_links:
+        failures += check_snippets(args.verbose)
+    if failures:
+        print(f"[docs] {failures} failure(s)")
+        raise SystemExit(1)
+    print("[docs] all snippets ran, all links resolve")
+
+
+if __name__ == "__main__":
+    main()
