@@ -14,6 +14,9 @@ Prints ``name,value,notes`` CSV.  Modules:
              pool oracle (measured-cost feedback + plan hot-swap)
   placement - placement planner vs hand-tuned / naive axis->level
              assignments, regular and irregular (4+2) topologies
+  observability - tracing overhead on/off (< 5%) + degraded-link
+             detection latency for an injected 4x-slow pool link
+             (flight recorder + health monitor + calibration)
 
 ``--smoke`` runs the fast CI path: coarse-grid plan generation + the
 autotune and overlap audits (exercises the whole tuner + overlap stack
@@ -29,7 +32,8 @@ import time
 
 from benchmarks import (autotune, fig3_characterization, fig9_collectives,
                         fig10_scalability, fig11_chunks, llm_case_study,
-                        overlap, placement, retune, topology)
+                        observability, overlap, placement, retune,
+                        topology)
 
 MODULES = [
     ("fig3", fig3_characterization),
@@ -42,10 +46,11 @@ MODULES = [
     ("topology", topology),
     ("retune", retune),
     ("placement", placement),
+    ("observability", observability),
 ]
 
 SMOKE_MODULES = ("fig3", "autotune", "overlap", "topology", "retune",
-                 "placement")
+                 "placement", "observability")
 
 
 def main() -> None:

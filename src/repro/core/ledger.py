@@ -32,7 +32,13 @@ sample tagged with the full plan-cell identity - primitive, message
 size, nranks, the (backend, slicing_factor, allreduce_mode) actually
 taken, and the topology level/fabric - and ``timing_cells`` aggregates
 the samples per cell key so ``tuner.online`` can fold them back into
-the plan as a measured cost.
+the plan as a measured cost.  Samples are stamped with the ambient
+``scale()`` multiplier (``calls``, like ``record_choice``) so a timing
+captured inside a scanned region is weighted by its true trip count
+when folded into EWMAs; knobs the caller does not know stay ``None``
+and aggregate under an explicit ``?`` key instead of polluting a real
+candidate's mean.  ``add_timing_hook`` registers an observer (the
+``repro.obs`` flight recorder) called once per sample.
 """
 from __future__ import annotations
 
@@ -53,6 +59,10 @@ _MULT: list = [1.0]
 _HIDDEN_CTX: list = [False]
 _CHOICES: list = []   # autotuner decisions, for benchmark audit
 _TIMINGS: list = []   # measured wall-time samples (online re-tuning)
+# Observers called once per timing sample (repro.obs flight recorder).
+# Deliberately NOT cleared by reset(): hooks are a process-lifetime
+# registration, while reset() runs at every re-trace boundary.
+_TIMING_HOOKS: list = []
 
 
 def reset() -> None:
@@ -136,27 +146,51 @@ def record_choice(primitive: str, msg_bytes: int, nranks: int,
 
 # -- measured wall-time capture (online re-tuning) -------------------------
 
+def add_timing_hook(hook) -> None:
+    """Register ``hook(sample_dict)`` to observe every timing sample as
+    it is recorded (the ``repro.obs`` flight recorder attaches here).
+    Hooks survive ``reset()``; detach with ``remove_timing_hook``."""
+    if hook not in _TIMING_HOOKS:
+        _TIMING_HOOKS.append(hook)
+
+
+def remove_timing_hook(hook) -> None:
+    if hook in _TIMING_HOOKS:
+        _TIMING_HOOKS.remove(hook)
+
+
 def record_timing(primitive: str, msg_bytes: int, nranks: int,
                   backend: str, seconds: float, *,
-                  slicing_factor: int = 4,
-                  allreduce_mode: str = "two_phase",
+                  slicing_factor: "int | None" = None,
+                  allreduce_mode: "str | None" = None,
                   level: "str | None" = None,
-                  fabric: "str | None" = None) -> None:
+                  fabric: "str | None" = None,
+                  calls: "float | None" = None) -> None:
     """Book one measured wall-time sample for a dispatched collective,
     tagged with everything ``tuner.online`` needs to aggregate it into
     a plan cell: the cell identity (primitive, size, nranks, level) and
-    the candidate actually executed (backend + knobs)."""
-    _TIMINGS.append({"primitive": primitive, "msg_bytes": int(msg_bytes),
-                     "nranks": int(nranks), "backend": backend,
-                     "slicing_factor": int(slicing_factor),
-                     "allreduce_mode": allreduce_mode,
-                     "level": level, "fabric": fabric,
-                     "seconds": float(seconds)})
+    the candidate actually executed (backend + knobs).  Knobs the
+    caller does not know stay ``None`` (aggregated under an explicit
+    ``?`` key, never pooled into a real candidate's mean).  ``calls``
+    defaults to the ambient ``scale()`` multiplier, so a sample from a
+    scanned region carries its true per-step trip count."""
+    t = {"primitive": primitive, "msg_bytes": int(msg_bytes),
+         "nranks": int(nranks), "backend": backend,
+         "slicing_factor": (None if slicing_factor is None
+                            else int(slicing_factor)),
+         "allreduce_mode": allreduce_mode,
+         "level": level, "fabric": fabric,
+         "seconds": float(seconds),
+         "calls": float(_MULT[-1] if calls is None else calls)}
+    _TIMINGS.append(t)
+    for hook in _TIMING_HOOKS:
+        hook(t)
 
 
 @contextlib.contextmanager
 def timed(primitive: str, msg_bytes: int, nranks: int, backend: str, *,
-          slicing_factor: int = 4, allreduce_mode: str = "two_phase",
+          slicing_factor: "int | None" = None,
+          allreduce_mode: "str | None" = None,
           level: "str | None" = None, fabric: "str | None" = None):
     """Time an eagerly executed region and book it as one sample.  The
     caller is responsible for making the region synchronous (e.g.
@@ -173,13 +207,22 @@ def timed(primitive: str, msg_bytes: int, nranks: int, backend: str, *,
                       level=level, fabric=fabric)
 
 
+def clear_timings() -> None:
+    """Drop the measured timing samples only (trace-time state stays).
+    Long-running loops call this after folding a step's samples into
+    the tuner/metrics so the sample list stays O(one step)."""
+    _TIMINGS.clear()
+
+
 def timing_cells() -> dict:
     """Diagnostic aggregation of the timing samples, keyed per
     (plan cell, executed candidate): ``"<primitive>/b<log2 bucket>/
     n<nranks>[/<level>]@<backend>:<factor>:<allreduce mode>"``
     -> sample count + total/mean seconds.  The candidate key carries
     the full knob tuple so two modes of the same backend never pool
-    into one mean.  This is a snapshot *readout* (dry-runs,
+    into one mean; knobs the sample does not carry key as a literal
+    ``?`` (an unknown-knob sample must never contaminate a tuned
+    candidate's mean).  This is a snapshot *readout* (dry-runs,
     debugging); ``tuner.online`` consumes the raw
     ``snapshot()["timings"]`` list, which keeps per-sample order for
     the EWMA."""
@@ -189,8 +232,10 @@ def timing_cells() -> dict:
         key = f"{t['primitive']}/b{bucket}/n{t['nranks']}"
         if t.get("level") is not None:
             key += f"/{t['level']}"
-        key += f"@{t['backend']}:{t.get('slicing_factor', 4)}" \
-               f":{t.get('allreduce_mode', 'two_phase')}"
+        sf = t.get("slicing_factor")
+        mode = t.get("allreduce_mode")
+        key += f"@{t['backend']}:{'?' if sf is None else sf}" \
+               f":{'?' if mode is None else mode}"
         c = cells.setdefault(key, {"samples": 0, "seconds_total": 0.0,
                                    "backend": t["backend"]})
         c["samples"] += 1

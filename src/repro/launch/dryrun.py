@@ -487,6 +487,12 @@ def main() -> None:
                     help="FSDP AllGather prefetch depth for the train "
                          "shape (0 = serialized baseline)")
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--metrics-out", default=None,
+                    help="export each run's ledger-derived metrics as "
+                         "JSON-lines here (repro.obs schema, one "
+                         "sample per line tagged with the run id) "
+                         "plus a Prometheus rendering of the last "
+                         "run's registry at <base>.prom")
     args = ap.parse_args()
 
     if args.topology:
@@ -501,6 +507,8 @@ def main() -> None:
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
     failures = 0
+    mf = open(args.metrics_out, "w") if args.metrics_out else None
+    last_reg = None
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
@@ -511,6 +519,27 @@ def main() -> None:
                               prefetch=args.prefetch,
                               placement=args.placement)
                 failures += rec["status"] != "ok"
+                if mf is not None and rec.get("ledger"):
+                    from repro.obs import MetricsRegistry, from_ledger
+                    reg = MetricsRegistry()
+                    from_ledger(reg, rec["ledger"])
+                    run_id = f"{arch}/{shape}" + (
+                        "/multi_pod" if mp else "")
+                    for m in reg.metrics():
+                        for name, key, v in m.samples():
+                            mf.write(json.dumps(
+                                {"kind": "metric", "run": run_id,
+                                 "name": name, "type": m.kind,
+                                 "labels": dict(key), "value": v},
+                                sort_keys=True) + "\n")
+                    last_reg = reg
+    if mf is not None:
+        mf.close()
+        if last_reg is not None:
+            prom = os.path.splitext(args.metrics_out)[0] + ".prom"
+            with open(prom, "w") as f:
+                f.write(last_reg.to_prometheus())
+            print(f"[dryrun] metrics: {args.metrics_out} (+ {prom})")
     print(f"[dryrun] done; {failures} failures")
     raise SystemExit(1 if failures else 0)
 

@@ -64,6 +64,11 @@ def main() -> None:
                          "'name=size,...'")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-step", type=int, default=None)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write per-round/retune events + the final "
+                         "metric registry as JSON-lines here (and a "
+                         "Prometheus rendering to <base>.prom); see "
+                         "repro.obs")
     args = ap.parse_args()
     if args.online_retune and not args.plan:
         ap.error("--online-retune requires --plan")
@@ -130,6 +135,10 @@ def main() -> None:
             retune_interval=args.retune_interval)
         # the refreshed plan lives in a file so rebuilt engines load it
         live_path = args.plan_out or (args.plan + ".refined.json")
+    obs_sess = None
+    if args.metrics_out:
+        from repro.obs import ObsSession
+        obs_sess = ObsSession(metrics_out=args.metrics_out)
     rounds = args.rounds if args.rounds is not None else (
         2 * args.retune_interval if args.online_retune else 1)
     out = None
@@ -142,6 +151,9 @@ def main() -> None:
         dt = time.time() - t0
         print(f"{cfg.name}: {out.shape} in {dt:.2f}s "
               f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
+        if obs_sess is not None:
+            obs_sess.on_step(r, dt, extra={
+                "tok_per_s": args.batch * args.new_tokens / dt})
         if online is None:
             continue
         if profile is None:
@@ -160,6 +172,11 @@ def main() -> None:
         refreshed = online.maybe_retune(r)
         if refreshed is not None:
             tuner.save_plan(refreshed, live_path)
+            if obs_sess is not None:
+                obs_sess.on_retune(
+                    epoch=tuner.plan_epoch(),
+                    swapped=tuner.choices_changed(prev, refreshed),
+                    regret_s=online.measured_regret())
             if tuner.choices_changed(prev, refreshed):
                 # hot-swap between rounds: rebuild the engine against
                 # the refreshed plan (its jitted prefill/decode must
@@ -174,6 +191,10 @@ def main() -> None:
         from repro.tuner import save_plan
         save_plan(refined, args.plan_out)
         print(f"saved refined plan (v4) -> {args.plan_out}")
+    if obs_sess is not None:
+        from repro.core import ledger as _ledger
+        obs_sess.finalize(snapshot=_ledger.snapshot(),
+                          extra={"rounds": rounds})
     print(out[: min(2, args.batch)].tolist())
 
 

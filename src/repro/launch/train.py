@@ -12,10 +12,27 @@ Usage:
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
       --smoke --backend auto --plan plan.json --online-retune \
       --retune-interval 10 --plan-out refined.json
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --smoke --backend auto --online-retune --timing-source emulator \
+      --metrics-out run.jsonl --trace-out run.trace.json
+
+Observability (repro.obs): ``--metrics-out`` streams step/retune/health
+events as JSON-lines and dumps the final metric registry (+ a
+Prometheus rendering next to it); ``--trace-out`` keeps a flight
+recorder of the last ``--trace-steps`` steps and writes a Chrome trace
+openable in Perfetto.  ``--timing-source`` picks where measured
+per-collective times come from: ``step`` (apportion the step wall time
+over the trace-time profile - the pre-obs behavior), ``emulator`` (the
+device-free oracle-driven ``obs.StepEmulator``; ``--emu-degrade``
+injects link slowdowns), or ``profiler`` (parse ``jax.profiler``
+traces; falls back to ``step`` if the build emits none).  With
+``--online-retune``, emulator/profiler sources feed the tuner
+*candidate-level* measurements instead of step-time apportioning.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -84,9 +101,31 @@ def main() -> None:
                          "for the DP/TP degrees.  Applies the best "
                          "assignment that keeps the TP axis unsplit")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write step/retune/health events + final "
+                         "metric registry as JSON-lines here (and a "
+                         "Prometheus text rendering to <base>.prom)")
+    ap.add_argument("--trace-out", default=None,
+                    help="flight-recorder Chrome trace JSON (last "
+                         "--trace-steps steps; open in Perfetto)")
+    ap.add_argument("--trace-steps", type=int, default=32,
+                    help="flight-recorder ring capacity in steps")
+    ap.add_argument("--timing-source", default="step",
+                    choices=["step", "emulator", "profiler"],
+                    help="measured-time source: 'step' apportions step "
+                         "wall time over the profile; 'emulator' / "
+                         "'profiler' produce per-collective samples "
+                         "(requires --backend auto)")
+    ap.add_argument("--emu-degrade", default=None,
+                    help="'key=factor,...' slowdowns for the emulator "
+                         "timing source; keys are level axes ('node'), "
+                         "fabric kinds ('cxl'), or '*'")
     args = ap.parse_args()
     if args.online_retune and args.backend != "auto":
         ap.error("--online-retune requires --backend auto")
+    if args.timing_source != "step" and args.backend != "auto":
+        ap.error("--timing-source emulator/profiler needs the "
+                 "--backend auto audit to key samples to plan cells")
 
     from repro.core.topology import (get_active_topology, parse_topology,
                                      set_active_topology, warn_uncovered)
@@ -156,6 +195,32 @@ def main() -> None:
         print(f"online re-tuning: interval {args.retune_interval} "
               f"steps, plan epoch {tuner.plan_epoch()}")
 
+    obs_sess = None
+    if args.metrics_out or args.trace_out:
+        from repro.obs import ObsSession
+        obs_sess = ObsSession(metrics_out=args.metrics_out,
+                              trace_out=args.trace_out,
+                              trace_steps=args.trace_steps)
+    emu = None
+    if args.timing_source == "emulator":
+        from repro.obs import StepEmulator
+        degrade = {}
+        for part in (args.emu_degrade or "").split(","):
+            if part.strip():
+                k, _, v = part.partition("=")
+                degrade[k.strip()] = float(v)
+        emu = StepEmulator(topology=get_active_topology(),
+                           noise_std=0.02, seed=0, degrade=degrade)
+    prof_dir, prof_failures = None, 0
+    if args.timing_source == "profiler":
+        import tempfile
+        prof_dir = tempfile.mkdtemp(prefix="repro-prof-")
+    # profile/emulator/profiler sources all need the trace-time audit
+    want_profile = (online is not None
+                    or args.timing_source != "step"
+                    or (obs_sess is not None
+                        and args.backend == "auto"))
+
     print(f"training {cfg.name} on mesh {dict(mesh.shape)} "
           f"backend={args.backend}")
     t0 = time.time()
@@ -163,31 +228,86 @@ def main() -> None:
     for i, batch in zip(range(args.steps), data):
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         ts = time.perf_counter()
-        params, opt, metrics = step(params, opt, batch)
-        if online is not None:
-            jax.block_until_ready(metrics["loss"])
+        step_timings = None
+        with (obs_sess.step_span(i) if obs_sess is not None
+              else contextlib.nullcontext()):
+            prof_cm = contextlib.nullcontext()
+            if prof_dir is not None and profile is not None \
+                    and prof_failures < 2:
+                prof_cm = jax.profiler.trace(prof_dir)
+            with prof_cm:
+                params, opt, metrics = step(params, opt, batch)
+                if want_profile or obs_sess is not None:
+                    jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - ts
-            if profile is None:
+            compiled_this_step = False
+            if want_profile and profile is None:
                 # the step traced during this call: its audit is the
                 # per-step collective profile every later step reruns
                 profile = ledger.snapshot()["auto_choices"]
-            else:
-                # skip the compile step's wall time; every cached step
-                # apportions its measured time over the profile
-                online.observe_step(dt, profile)
-            prev = online.plan
-            refreshed = online.maybe_retune(i)
-            if refreshed is not None and \
-                    tuner.choices_changed(prev, refreshed):
-                # hot-swap: the registry already serves the refreshed
-                # plan (epoch bumped); re-trace the step so auto
-                # resolution picks it up at the next step boundary
-                ledger.reset()
-                profile = None
-                step, pspecs, bspecs, pc = make_sharded_train_step(
-                    cfg, tcfg, mesh, dp_axis=dp_axes(mesh))
-                print(f"step {i:5d} plan hot-swap -> epoch "
-                      f"{tuner.plan_epoch()} (choices changed)")
+                compiled_this_step = True
+            if profile is not None and not compiled_this_step:
+                if emu is not None:
+                    # books each sample into the ledger, which feeds
+                    # the flight recorder via the timing hook
+                    step_timings = emu.step_timings(profile)
+                elif prof_dir is not None:
+                    from repro.obs import profiled_timings
+                    step_timings = profiled_timings(prof_dir, profile,
+                                                    book=True)
+                    if not step_timings:
+                        prof_failures += 1
+                        if prof_failures == 2:
+                            print("warning: no parseable profiler "
+                                  "traces; falling back to step-time "
+                                  "apportioning")
+            if online is not None and profile is not None \
+                    and not compiled_this_step:
+                if step_timings:
+                    # candidate-level feedback: every sample carries
+                    # its own plan-cell identity + executed knobs
+                    online.observe_timings(step_timings)
+                else:
+                    # skip the compile step's wall time; every cached
+                    # step apportions its measured time over the
+                    # profile
+                    online.observe_step(dt, profile)
+            if online is not None:
+                prev = online.plan
+                refreshed = online.maybe_retune(i)
+                if refreshed is not None:
+                    swapped = tuner.choices_changed(prev, refreshed)
+                    if obs_sess is not None:
+                        obs_sess.on_retune(
+                            epoch=tuner.plan_epoch(), swapped=swapped,
+                            regret_s=online.measured_regret(),
+                            measured_cells=sum(
+                                st.samples > 0
+                                for st in online.stats.values()))
+                    if online.calibration:
+                        from repro.obs import calibration_drift
+                        for d in calibration_drift(
+                                online.calibration_export()):
+                            print(f"step {i:5d} calibration drift: "
+                                  f"{d['backend']}@{d['level']} "
+                                  f"measures {d['scale']}x the oracle "
+                                  f"- {d['recommendation']}")
+                    if swapped:
+                        # hot-swap: the registry already serves the
+                        # refreshed plan (epoch bumped); re-trace the
+                        # step so auto resolution picks it up at the
+                        # next step boundary
+                        ledger.reset()
+                        profile = None
+                        step, pspecs, bspecs, pc = \
+                            make_sharded_train_step(
+                                cfg, tcfg, mesh, dp_axis=dp_axes(mesh))
+                        print(f"step {i:5d} plan hot-swap -> epoch "
+                              f"{tuner.plan_epoch()} (choices changed)")
+        if obs_sess is not None:
+            obs_sess.on_step(i, time.perf_counter() - ts,
+                             timings=step_timings)
+        ledger.clear_timings()    # folded; keep the list O(one step)
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
                   f"({time.time() - t0:.1f}s)")
@@ -198,6 +318,14 @@ def main() -> None:
         measured = sum(st.samples > 0 for st in online.stats.values())
         print(f"saved refined plan (v4, {len(refined.entries)} cells, "
               f"{measured} measured candidates) -> {args.plan_out}")
+    if obs_sess is not None:
+        obs_sess.finalize(snapshot=ledger.snapshot(),
+                          extra={"steps": int(args.steps),
+                                 "wall_s": time.time() - t0,
+                                 "timing_source": args.timing_source})
+    if prof_dir is not None:
+        import shutil
+        shutil.rmtree(prof_dir, ignore_errors=True)
     if args.ckpt:
         checkpoint.save(args.ckpt, args.steps, {"params": params})
         print(f"saved {args.ckpt}/step_{args.steps:08d}")

@@ -1,0 +1,34 @@
+"""Runtime observability: tracing, profiling, metrics, link health.
+
+The trace-time ledger (``core.ledger``) answers "what *should* this
+step cost"; this package watches what it *does* cost and closes the
+loop:
+
+* ``obs.trace``   - span tracer + flight recorder (Chrome trace JSON);
+* ``obs.profile`` - per-collective wall times from a ``jax.profiler``
+  trace or the device-free ``StepEmulator``, keyed to plan cells;
+* ``obs.metrics`` - counters/gauges/histograms exported as JSON-lines
+  and Prometheus text;
+* ``obs.health``  - per-(level, fabric) EWMA baselines flagging
+  persistently slow links into metrics + the plan registry;
+* ``obs.session`` - ``ObsSession``, the launcher facade behind
+  ``--metrics-out`` / ``--trace-out``.
+
+See docs/OBSERVABILITY.md for schemas and the degraded-link
+walkthrough.
+"""
+from repro.obs.health import HealthMonitor, calibration_drift
+from repro.obs.metrics import (Counter, Gauge, Histogram,
+                               MetricsRegistry, from_ledger)
+from repro.obs.profile import StepEmulator, profiled_timings, trace_timings
+from repro.obs.session import ObsSession
+from repro.obs.trace import (Tracer, disable_tracing, enable_tracing,
+                             get_tracer)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "from_ledger",
+    "Tracer", "enable_tracing", "disable_tracing", "get_tracer",
+    "StepEmulator", "profiled_timings", "trace_timings",
+    "HealthMonitor", "calibration_drift",
+    "ObsSession",
+]

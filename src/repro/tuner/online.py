@@ -11,10 +11,17 @@ choice forever.  This module closes the loop:
    measured *step* times apportioned over the step's trace-time
    ``auto_choices`` audit by predicted-time share
    (``OnlineTuner.observe_step`` - the ROADMAP's "feed measured step
-   times back into the plan").  Samples aggregate per plan cell key
-   ``(primitive, size bucket, nranks[, level])`` *and* per candidate
-   ``(backend, slicing_factor, allreduce_mode)`` as an
-   exponentially-weighted moving average.
+   times back into the plan"), or - the preferred path - as
+   per-collective profiler/emulator samples parsed by ``repro.obs.
+   profile`` and booked through the same ledger capture.  Samples
+   aggregate per plan cell key ``(primitive, size bucket,
+   nranks[, level])`` *and* per candidate ``(backend, slicing_factor,
+   allreduce_mode)`` as an exponentially-weighted moving average,
+   weighted by the sample's true per-step trip count (``calls``, the
+   ledger's ambient ``scale()`` stamp).  A sample whose knobs are
+   unknown (``None``) aggregates under an explicit ``?`` pseudo-
+   candidate - never into a real candidate's mean - except for
+   ``ring``, whose single candidate ignores the knobs by construction.
 
 2. **Refresh**: ``OnlineTuner.refresh`` re-resolves every cell of the
    base plan: each candidate is priced by its measured EWMA once the
@@ -23,6 +30,19 @@ choice forever.  This module closes the loop:
    measured feedback persisted in the plan (format v4:
    ``measured_us``/``sample_count``/``ewma_alpha``), so a saved
    refreshed plan warm-starts the next run's tuner.
+
+   Oracle-priced candidates are additionally corrected by learned
+   **calibration scales**: every measurement also folds the ratio
+   measured/oracle into a sample-weighted mean keyed ``(backend,
+   level, primitive)``, and unmeasured candidates are priced
+   ``oracle * scale`` once the scale has ``min_samples`` of support.  Measurements thereby correct
+   the oracle *everywhere* that backend runs that primitive on that
+   level - not just at measured cells.  (The primitive stays in the
+   key so one pathological broadcast measurement cannot reprice
+   all_reduce cells; the per-(backend, level) aggregate is still
+   persisted/reported for fabric-drift detection, ``obs.health``.)
+   Scales ride in plan ``meta["calibration"]`` and warm-start the next
+   run's tuner alongside the measured cells.
 
 3. **Hot-swap**: ``refresh_and_activate`` publishes the refreshed plan
    through the epoch-versioned active-plan registry
@@ -47,6 +67,7 @@ import dataclasses
 import re
 from typing import Optional
 
+from repro.core import mesh_collectives as mc
 from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
                            InfiniBandConfig)
 from repro.tuner import costmodel
@@ -56,6 +77,7 @@ from repro.tuner.sweep import DEFAULT_GRID, TuneGrid, _candidates
 DEFAULT_ALPHA = 0.3         # EWMA smoothing factor
 DEFAULT_MIN_SAMPLES = 3     # samples before measured overrides oracle
 DEFAULT_RETUNE_INTERVAL = 10
+UNKNOWN = "?"               # pseudo-knob for samples with unknown knobs
 _LKEY_RE = re.compile(r"\d+:[0-9a-f]+")   # "<idx>:<fabric fp>"
 
 
@@ -69,18 +91,55 @@ def cell_key(primitive: str, msg_bytes: int, nranks: int,
 
 @dataclasses.dataclass
 class CellStats:
-    """EWMA of measured wall time for one (cell, candidate)."""
+    """EWMA of measured wall time for one (cell, candidate).
+
+    ``weight`` is the sample's true per-step launch count (the
+    ledger's ``calls`` stamp): a sample that stands for ``w`` launches
+    of a scanned region moves the EWMA as if observed ``w`` times
+    (``alpha_eff = 1 - (1-alpha)^w``) and advances the sample count by
+    ``w``."""
 
     ewma_seconds: float = 0.0
-    samples: int = 0
+    samples: float = 0.0
 
-    def update(self, seconds: float, alpha: float) -> None:
+    def update(self, seconds: float, alpha: float,
+               weight: float = 1.0) -> None:
+        w = max(0.0, float(weight))
+        if w == 0.0:
+            return
         if self.samples == 0:
             self.ewma_seconds = seconds
         else:
-            self.ewma_seconds = (alpha * seconds
-                                 + (1.0 - alpha) * self.ewma_seconds)
-        self.samples += 1
+            a = 1.0 - (1.0 - alpha) ** w
+            self.ewma_seconds = (a * seconds
+                                 + (1.0 - a) * self.ewma_seconds)
+        self.samples += w
+
+
+@dataclasses.dataclass
+class CalStats:
+    """Sample-weighted mean of the measured/oracle time ratio for one
+    (backend, level, primitive) - the learned calibration scale that
+    corrects oracle-priced candidates everywhere, not just at measured
+    cells.  A *mean*, not an EWMA, deliberately: the ratio varies
+    across the cells that feed one key (the oracle's error is not
+    uniform in size/nranks), and an EWMA would slosh toward whichever
+    cell folded last, repricing unmeasured candidates differently at
+    every retune boundary and reopening settled cells.  The mean is
+    the stationary estimate; *drift* (real hardware change) is the
+    health monitor's job (``obs.health``), and per-cell truth always
+    wins anyway once the cell's own measured EWMA overrides."""
+
+    scale: float = 1.0
+    samples: float = 0.0
+
+    def update(self, ratio: float, weight: float = 1.0) -> None:
+        w = max(0.0, float(weight))
+        if w == 0.0 or ratio <= 0.0:
+            return
+        tot = self.samples + w
+        self.scale = (self.scale * self.samples + float(ratio) * w) / tot
+        self.samples = tot
 
 
 def _grid_from_meta(meta: dict) -> TuneGrid:
@@ -112,6 +171,7 @@ class OnlineTuner:
     def __init__(self, plan: Plan, *, alpha: float = DEFAULT_ALPHA,
                  min_samples: int = DEFAULT_MIN_SAMPLES,
                  retune_interval: int = DEFAULT_RETUNE_INTERVAL,
+                 calibration_min_samples: Optional[int] = None,
                  pool: CXLPoolConfig = CXL_POOL,
                  ib: InfiniBandConfig = INFINIBAND):
         if not 0.0 < alpha <= 1.0:
@@ -121,6 +181,12 @@ class OnlineTuner:
         self.plan = plan
         self.alpha = float(alpha)
         self.min_samples = max(1, int(min_samples))
+        # Generalizing a correction across every cell of a (backend,
+        # level, primitive) takes more evidence than overriding one
+        # measured cell, so the calibration floor never drops below 2.
+        self.cal_min_samples = max(2, self.min_samples) \
+            if calibration_min_samples is None \
+            else max(1, int(calibration_min_samples))
         self.retune_interval = int(retune_interval)
         self.pool = pool
         self.ib = ib
@@ -154,13 +220,22 @@ class OnlineTuner:
         self.window_unknown = isinstance(w, str)     # "per-cell"
         # (cell key, (backend, factor, mode)) -> CellStats
         self.stats: dict = {}
+        # (backend, level key or None, primitive) -> CalStats
+        self.calibration: dict = {}
         self.refresh_count = 0
         for key, ch in plan.entries.items():
             if ch.sample_count > 0 and ch.measured_us > 0.0:
                 cand = (ch.backend, ch.slicing_factor, ch.allreduce_mode)
                 self.stats[(key, cand)] = CellStats(
                     ewma_seconds=ch.measured_us * 1e-6,
-                    samples=ch.sample_count)
+                    samples=float(ch.sample_count))
+        # persisted calibration scales warm-start the ratio EWMAs, so a
+        # tune -> train --plan-out -> train chain keeps its corrected
+        # oracle across processes
+        for e in (plan.meta.get("calibration") or {}).get("scales", []):
+            self.calibration[(e["backend"], e.get("level"),
+                              e["primitive"])] = CalStats(
+                scale=float(e["scale"]), samples=float(e["samples"]))
 
     # -- observation ------------------------------------------------------
 
@@ -180,20 +255,45 @@ class OnlineTuner:
         # agnostically instead of silently dropping the sample
         return None
 
+    @staticmethod
+    def _cand(backend: str, slicing_factor, allreduce_mode) -> tuple:
+        """Normalize the executed candidate.  ``ring`` has exactly one
+        candidate (NCCL picks its own chunking), so unknown knobs are
+        unambiguous there; for ``cxl`` an unknown knob keys an explicit
+        ``?`` pseudo-candidate that never matches a real one - it can
+        not contaminate a tuned cell's mean."""
+        if backend == "ring":
+            return (backend, mc.DEFAULT_CHUNKS, "two_phase")
+        if slicing_factor is None or allreduce_mode is None:
+            return (backend, UNKNOWN, UNKNOWN)
+        return (backend, int(slicing_factor), allreduce_mode)
+
     def observe(self, primitive: str, msg_bytes: int, nranks: int,
                 backend: str, seconds: float, *,
-                slicing_factor: int = 4,
-                allreduce_mode: str = "two_phase",
-                level: Optional[str] = None) -> None:
-        """Fold one measured wall-time sample into the per-cell EWMA.
+                slicing_factor: "int | None" = 4,
+                allreduce_mode: "str | None" = "two_phase",
+                level: Optional[str] = None,
+                calls: float = 1.0) -> None:
+        """Fold one measured wall-time sample into the per-cell EWMA
+        (weighted by ``calls``, its true per-step trip count) and the
+        per-(backend, level, primitive) calibration-ratio EWMA.
         ``level`` accepts either the topology axis name (what the
         ledger tags) or the plan's ``"<idx>:<fabric fp>"`` level key."""
         if nranks <= 1 or seconds < 0.0:
             return
-        key = cell_key(primitive, msg_bytes, nranks, self._lkey(level))
-        cand = (backend, int(slicing_factor), allreduce_mode)
+        lkey = self._lkey(level)
+        key = cell_key(primitive, msg_bytes, nranks, lkey)
+        cand = self._cand(backend, slicing_factor, allreduce_mode)
         st = self.stats.setdefault((key, cand), CellStats())
-        st.update(float(seconds), self.alpha)
+        st.update(float(seconds), self.alpha, weight=calls)
+        if UNKNOWN in cand:
+            return        # cannot price an unknown candidate's oracle
+        oracle = self._oracle_at(primitive, int(msg_bytes), int(nranks),
+                                 lkey, *cand)
+        if oracle > 1e-12:
+            cs = self.calibration.setdefault(
+                (backend, lkey, primitive), CalStats())
+            cs.update(float(seconds) / oracle, weight=calls)
 
     def observe_timings(self, timings: list) -> int:
         """Consume ledger timing samples (``snapshot()["timings"]`` or
@@ -202,10 +302,10 @@ class OnlineTuner:
         for t in timings:
             self.observe(t["primitive"], t["msg_bytes"], t["nranks"],
                          t["backend"], t["seconds"],
-                         slicing_factor=t.get("slicing_factor", 4),
-                         allreduce_mode=t.get("allreduce_mode",
-                                              "two_phase"),
-                         level=t.get("level"))
+                         slicing_factor=t.get("slicing_factor"),
+                         allreduce_mode=t.get("allreduce_mode"),
+                         level=t.get("level"),
+                         calls=t.get("calls", 1.0))
             n += 1
         return n
 
@@ -249,43 +349,66 @@ class OnlineTuner:
                          slicing_factor=c.get("slicing_factor", 4),
                          allreduce_mode=c.get("allreduce_mode",
                                               "two_phase"),
-                         level=c.get("level"))
+                         level=c.get("level"), calls=calls)
             n += 1
         return n
 
     # -- repricing --------------------------------------------------------
 
-    def _oracle_time(self, key: tuple, backend: str, factor: int,
-                     mode: str) -> float:
-        prim, bucket, nranks = key[0], key[1], key[2]
-        size = 1 << bucket
-        if len(key) == 4 and key[3] in self._levels:
+    def _oracle_at(self, primitive: str, msg_bytes: int, nranks: int,
+                   lkey: Optional[str], backend: str, factor: int,
+                   mode: str) -> float:
+        """Oracle time at the *actual* message size (not the bucket
+        floor), for calibration ratios."""
+        if lkey is not None and lkey in self._levels:
             return costmodel.predict_level_time(
-                self._levels[key[3]], prim, nranks, size,
+                self._levels[lkey], primitive, nranks, msg_bytes,
                 backend=backend, slicing_factor=factor,
                 allreduce_mode=mode)
         return costmodel.predict_time(
-            backend, prim, nranks, size, slicing_factor=factor,
-            allreduce_mode=mode, pool=self.pool, ib=self.ib)
+            backend, primitive, nranks, msg_bytes,
+            slicing_factor=factor, allreduce_mode=mode,
+            pool=self.pool, ib=self.ib)
+
+    def _oracle_time(self, key: tuple, backend: str, factor: int,
+                     mode: str) -> float:
+        lkey = key[3] if len(key) == 4 else None
+        return self._oracle_at(key[0], 1 << key[1], key[2], lkey,
+                               backend, factor, mode)
+
+    def cal_scale(self, backend: str, lkey: Optional[str],
+                  primitive: str) -> float:
+        """The learned measured/oracle correction applied to
+        oracle-priced candidates (1.0 until ``cal_min_samples`` ratio
+        samples landed for the (backend, level, primitive))."""
+        cs = self.calibration.get((backend, lkey, primitive))
+        if cs is not None and cs.samples >= self.cal_min_samples:
+            return cs.scale
+        return 1.0
 
     def cost(self, key: tuple, backend: str, factor: int,
              mode: str) -> tuple:
         """(cost seconds, stats or None) of one candidate for one cell:
         the measured EWMA once ``min_samples`` samples landed for that
-        exact candidate, the offline oracle otherwise - windowed by the
-        base plan's constant overlap objective, so oracle-priced
-        candidates compete on the same exposed-time terms the sweep
-        tuned with (measured wall times are already exposure)."""
+        exact candidate, the calibration-corrected offline oracle
+        otherwise - windowed by the base plan's constant overlap
+        objective, so oracle-priced candidates compete on the same
+        exposed-time terms the sweep tuned with (measured wall times
+        are already exposure)."""
         st = self.stats.get((key, (backend, factor, mode)))
         if st is not None and st.samples >= self.min_samples:
             return st.ewma_seconds, st
-        t = self._oracle_time(key, backend, factor, mode)
+        lkey = key[3] if len(key) == 4 else None
+        t = self._oracle_time(key, backend, factor, mode) \
+            * self.cal_scale(backend, lkey, key[0])
         return max(0.0, t - self.overlap_window), st
 
     def _measured_keys(self) -> set:
-        """Cell keys with at least one candidate past min_samples."""
-        return {k for (k, _c), st in self.stats.items()
-                if st.samples >= self.min_samples}
+        """Cell keys with at least one *real* candidate past
+        min_samples (unknown-knob pseudo-candidates don't count: they
+        can never price a refresh)."""
+        return {k for (k, c), st in self.stats.items()
+                if st.samples >= self.min_samples and UNKNOWN not in c}
 
     def refresh(self) -> Plan:
         """Re-resolve every cell of the base plan - plus every cell the
@@ -308,6 +431,8 @@ class OnlineTuner:
                           "min_samples": self.min_samples,
                           "refresh_count": self.refresh_count,
                           "measured_candidates": measured_cells}
+        if self.calibration:
+            meta["calibration"] = self.calibration_export()
         out = Plan(fingerprint=self.plan.fingerprint, meta=meta)
         measured_keys = self._measured_keys()
         keys = set(self.plan.entries)
@@ -349,7 +474,8 @@ class OnlineTuner:
             # the base plan was tuned in isolation)
             same = best == (base_ch.backend, base_ch.slicing_factor,
                             base_ch.allreduce_mode)
-            wire = self._oracle_time(key, *best)
+            wire = self._oracle_time(key, *best) \
+                * self.cal_scale(best[0], lkey, key[0])
             out.entries[key] = Choice(
                 backend=best[0], slicing_factor=best[1],
                 allreduce_mode=best[2],
@@ -361,10 +487,63 @@ class OnlineTuner:
                              else min(wire, self.overlap_window)),
                 measured_us=(best_st.ewma_seconds * 1e6
                              if best_st is not None else 0.0),
-                sample_count=(best_st.samples
+                sample_count=(int(round(best_st.samples))
                               if best_st is not None else 0),
                 ewma_alpha=self.alpha if best_st is not None else 0.0)
         return out
+
+    # -- calibration + regret readouts ------------------------------------
+
+    def calibration_export(self) -> dict:
+        """The learned calibration table, as persisted in plan
+        ``meta["calibration"]``: the full per-(backend, level,
+        primitive) ``scales`` (what pricing uses and what warm-starts
+        the next run), plus the per-(backend, level) aggregate
+        ``levels`` - the fabric-level drift signal ``obs.health``
+        consumes (sample-weighted mean of the primitive scales)."""
+        scales = [{"backend": b, "level": lk, "primitive": p,
+                   "scale": cs.scale, "samples": cs.samples}
+                  for (b, lk, p), cs in sorted(
+                      self.calibration.items(),
+                      key=lambda kv: (kv[0][0], kv[0][1] or "",
+                                      kv[0][2]))]
+        agg: dict = {}
+        for (b, lk, _p), cs in self.calibration.items():
+            tot = agg.setdefault((b, lk), [0.0, 0.0])
+            tot[0] += cs.scale * cs.samples
+            tot[1] += cs.samples
+        levels = [{"backend": b, "level": lk,
+                   "scale": (s / n if n > 0.0 else 1.0), "samples": n}
+                  for (b, lk), (s, n) in sorted(
+                      agg.items(), key=lambda kv: (kv[0][0],
+                                                   kv[0][1] or ""))]
+        return {"scales": scales, "levels": levels}
+
+    def measured_regret(self) -> float:
+        """Per-launch regret (seconds) the measurements can prove: for
+        every cell whose *current* choice is measured, the gap between
+        its EWMA and the best measured candidate's EWMA.  Zero when
+        every measured cell already runs its measured-fastest
+        candidate - the plan-cell regret gauge ``obs.metrics``
+        exports."""
+        best: dict = {}
+        for (key, cand), st in self.stats.items():
+            if UNKNOWN in cand or st.samples < self.min_samples:
+                continue
+            cur = best.get(key)
+            if cur is None or st.ewma_seconds < cur:
+                best[key] = st.ewma_seconds
+        regret = 0.0
+        for key, best_s in best.items():
+            ch = self.plan.entries.get(key)
+            if ch is None:
+                continue
+            st = self.stats.get(
+                (key, (ch.backend, ch.slicing_factor,
+                       ch.allreduce_mode)))
+            if st is not None and st.samples >= self.min_samples:
+                regret += max(0.0, st.ewma_seconds - best_s)
+        return regret
 
     # -- hot-swap ---------------------------------------------------------
 

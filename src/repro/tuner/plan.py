@@ -158,6 +158,17 @@ class Plan:
         from repro.tuner.placement import PlacementPlan
         return PlacementPlan.from_json(doc)
 
+    def calibration(self) -> dict:
+        """The learned measured/oracle calibration table persisted by
+        ``tuner.online.OnlineTuner.refresh`` (see
+        ``calibration_export``): ``{"scales": [...], "levels": [...]}``
+        with per-(backend, level, primitive) pricing scales and the
+        per-(backend, level) aggregate that ``obs.health`` reads as a
+        fabric-drift signal.  Empty dict when the plan carries no
+        measurements.  Free-form ``meta`` keys load under every
+        readable plan version, so no format bump is needed."""
+        return dict(self.meta.get("calibration") or {})
+
     def levels(self) -> tuple:
         """Distinct level keys appearing in the plan's cells."""
         return tuple(sorted({k[3] for k in self.entries if len(k) == 4}))

@@ -59,6 +59,47 @@ def test_train_launcher_online_retune(tmp_path):
 
 
 @pytest.mark.slow
+def test_train_launcher_observability(tmp_path):
+    """--metrics-out/--trace-out/--timing-source emulator end to end:
+    per-collective emulated times feed the online tuner, the JSON-lines
+    stream + Prometheus rendering + flight-recorder trace land on disk,
+    and the report CLI summarizes them."""
+    import json
+    metrics = tmp_path / "run.jsonl"
+    trace = tmp_path / "run.trace.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "llama3.2-1b", "--smoke", "--steps", "8", "--batch", "4",
+         "--seq", "32", "--mesh", "2x2", "--backend", "auto",
+         "--online-retune", "--retune-interval", "4",
+         "--timing-source", "emulator",
+         "--metrics-out", str(metrics), "--trace-out", str(trace),
+         "--trace-steps", "4"],
+        env=_env(4), capture_output=True, text=True, timeout=1200,
+        cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    events = [json.loads(ln) for ln in open(metrics) if ln.strip()]
+    kinds = {e["kind"] for e in events}
+    assert {"step", "retune", "metric", "summary"} <= kinds, kinds
+    steps = [e for e in events if e["kind"] == "step"]
+    assert len(steps) == 8
+    assert any(e.get("timing_samples", 0) > 0 for e in steps)
+    assert (tmp_path / "run.prom").exists()
+    doc = json.load(open(trace))
+    assert doc["metadata"]["steps_retained"] == [4, 5, 6, 7]
+    assert any(e.get("cat") == "collective" for e in doc["traceEvents"])
+    rep = subprocess.run(
+        [sys.executable, "-m", "repro.launch.report", str(metrics),
+         "--trace", str(trace)],
+        env=_env(), capture_output=True, text=True, timeout=300,
+        cwd=ROOT)
+    assert rep.returncode == 0, rep.stderr[-2000:]
+    assert "steps: 8" in rep.stdout
+    assert "collective time by cell" in rep.stdout
+    assert "flight recorder" in rep.stdout
+
+
+@pytest.mark.slow
 def test_serve_launcher():
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-6b",

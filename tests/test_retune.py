@@ -108,21 +108,39 @@ def test_saved_plan_roundtrips_measured_fields(tiny_plan, tmp_path):
 def test_ledger_timing_capture_and_cells():
     ledger.reset()
     ledger.record_timing("all_gather", 1 * MiB, 3, "cxl", 1e-3,
-                         slicing_factor=2)
+                         slicing_factor=2, allreduce_mode="two_phase")
     with ledger.timed("all_reduce", 2 * MiB, 4, "ring"):
         pass
     snap = ledger.snapshot()
     assert len(snap["timings"]) == 2
     t0 = snap["timings"][0]
     assert t0["backend"] == "cxl" and t0["slicing_factor"] == 2
+    assert t0["calls"] == 1.0
     assert snap["timings"][1]["seconds"] >= 0.0
     cells = snap["timing_cells"]
     k = "all_gather/b20/n3@cxl:2:two_phase"
     assert cells[k]["samples"] == 1
     assert cells[k]["mean_seconds"] == pytest.approx(1e-3)
-    assert "all_reduce/b21/n4@ring:4:two_phase" in cells
+    # knobs the caller does not know key explicitly as '?' - they must
+    # never pool into a tuned candidate's mean
+    assert "all_reduce/b21/n4@ring:?:?" in cells
     ledger.reset()
     assert ledger.snapshot()["timings"] == []
+
+
+def test_ledger_timing_stamps_ambient_scale():
+    """A timing captured inside ledger.scale() carries its true trip
+    count, so scanned-region samples weight EWMAs correctly."""
+    ledger.reset()
+    with ledger.scale(3):
+        with ledger.scale(2):
+            ledger.record_timing("all_gather", 1 * MiB, 3, "ring", 1e-3)
+    ledger.record_timing("all_gather", 1 * MiB, 3, "ring", 1e-3,
+                         calls=7.0)   # explicit override wins
+    snap = ledger.snapshot()
+    assert snap["timings"][0]["calls"] == 6.0
+    assert snap["timings"][1]["calls"] == 7.0
+    ledger.reset()
 
 
 # -- EWMA aggregation + convergence under noise ---------------------------
