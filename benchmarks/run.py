@@ -17,6 +17,9 @@ Prints ``name,value,notes`` CSV.  Modules:
   observability - tracing overhead on/off (< 5%) + degraded-link
              detection latency for an injected 4x-slow pool link
              (flight recorder + health monitor + calibration)
+  resilience - chaos audit: rank death / link degrade / transient
+             pool faults each driven through detect -> re-plan ->
+             resume, with steps-lost and degraded-step-cost bounds
 
 ``--smoke`` runs the fast CI path: coarse-grid plan generation + the
 autotune and overlap audits (exercises the whole tuner + overlap stack
@@ -32,8 +35,8 @@ import time
 
 from benchmarks import (autotune, fig3_characterization, fig9_collectives,
                         fig10_scalability, fig11_chunks, llm_case_study,
-                        observability, overlap, placement, retune,
-                        topology)
+                        observability, overlap, placement, resilience,
+                        retune, topology)
 
 MODULES = [
     ("fig3", fig3_characterization),
@@ -47,10 +50,11 @@ MODULES = [
     ("retune", retune),
     ("placement", placement),
     ("observability", observability),
+    ("resilience", resilience),
 ]
 
 SMOKE_MODULES = ("fig3", "autotune", "overlap", "topology", "retune",
-                 "placement", "observability")
+                 "placement", "observability", "resilience")
 
 
 def main() -> None:

@@ -84,3 +84,78 @@ class DoorbellRegion:
         if not 0 <= index < self.capacity:
             raise IndexError(
                 f"doorbell index {index} out of range [0, {self.capacity})")
+
+
+@dataclasses.dataclass
+class HeartbeatRegion:
+    """Per-rank liveness words in pool memory, reusing the doorbell
+    protocol.
+
+    Rank ``r``'s heartbeat is a single word at the index-calculated
+    address ``r * DOORBELL_BYTES`` in a dedicated region after the
+    doorbells — same allocator-free addressing as ``DoorbellRegion``.
+    A live rank overwrites its word with the current step index once
+    per step and flushes (a producer "ring"); the failure monitor polls
+    every word (invalidate + re-read, a consumer poll) and treats a
+    word that has stopped advancing as a missing rank.
+
+    Pulses route through the pool fault hook (``core.pool.check_fault``)
+    so injected rank deaths and pool faults surface exactly where a
+    real pool store would fail: a dead rank's pulse raises
+    ``PoolAccessError`` and its word goes stale on its own.
+    """
+
+    nranks: int
+    _words: list[int] = dataclasses.field(default_factory=list)
+    # Telemetry, doorbell-style.
+    pulses: int = 0
+    polls: int = 0
+    flushes: int = 0
+
+    def __post_init__(self) -> None:
+        if self.nranks <= 0:
+            raise ValueError("heartbeat region needs at least one rank")
+        self._words = [-1] * self.nranks  # -1: never pulsed
+
+    @property
+    def region_bytes(self) -> int:
+        return self.nranks * DOORBELL_BYTES
+
+    def address(self, rank: int) -> int:
+        """Index-calculated heartbeat address for ``rank``."""
+        self._check(rank)
+        return rank * DOORBELL_BYTES
+
+    def pulse(self, rank: int, step: int) -> None:
+        """Rank ``rank`` publishes liveness for ``step`` (store + flush).
+
+        Raises ``PoolAccessError`` if a fault hook decides this rank's
+        pool store fails (rank death, transient pool fault)."""
+        self._check(rank)
+        from repro.core import pool as _pool  # late: pool imports us
+        _pool.check_fault("heartbeat", rank=rank, step=step,
+                          offset=self.address(rank))
+        self._words[rank] = step
+        self.pulses += 1
+        self.flushes += 1
+
+    def read(self, rank: int) -> int:
+        """Monitor poll: invalidate + re-read one liveness word."""
+        self._check(rank)
+        self.polls += 1
+        self.flushes += 1
+        return self._words[rank]
+
+    def read_all(self) -> tuple[int, ...]:
+        return tuple(self.read(r) for r in range(self.nranks))
+
+    def stale_ranks(self, step: int, timeout_steps: int) -> list[int]:
+        """Ranks whose word is more than ``timeout_steps`` behind
+        ``step`` (or never pulsed)."""
+        return [r for r in range(self.nranks)
+                if step - self.read(r) > timeout_steps]
+
+    def _check(self, rank: int) -> None:
+        if not 0 <= rank < self.nranks:
+            raise IndexError(
+                f"heartbeat rank {rank} out of range [0, {self.nranks})")

@@ -14,11 +14,80 @@ rank's device partition, and (c) the collective's result matches the pure
 """
 from __future__ import annotations
 
+import time
+from typing import Any, Callable, Optional
+
 import numpy as np
 
 from repro.core import schedule as sched
 from repro.core.doorbell import DoorbellRegion
 from repro.core.interleave import PoolLayout
+
+
+class PoolAccessError(RuntimeError):
+    """A pool-side load/store (or doorbell/heartbeat word) failed.
+
+    Raised by an installed fault hook to model the unhappy path of the
+    pooled fabric: a dead rank whose writes never land, a CXL port
+    returning poisoned reads, a transient timeout.  Collective and
+    checkpoint paths decide per-site whether the error is retryable
+    (``with_retries``) or a confirmed failure for the monitor.
+    """
+
+
+# Module-level fault hook: ``hook(op, info)`` is consulted before every
+# emulated pool access and raises PoolAccessError to inject a failure.
+# One slot (not a list of hooks): fault injection composes inside a
+# FaultPlan, not by stacking hooks.
+_FAULT_HOOK: list[Optional[Callable[[str, dict], None]]] = [None]
+
+
+def set_fault_hook(hook: Callable[[str, dict], None]) -> None:
+    """Install ``hook(op, info)``; it raises ``PoolAccessError`` to
+    inject a failure at that access.  ``op`` names the access kind
+    ("write" / "read" / "heartbeat" / "ckpt_write" / ...), ``info``
+    carries at least the acting ``rank`` where known."""
+    _FAULT_HOOK[0] = hook
+
+
+def clear_fault_hook() -> None:
+    _FAULT_HOOK[0] = None
+
+
+def get_fault_hook() -> Optional[Callable[[str, dict], None]]:
+    return _FAULT_HOOK[0]
+
+
+def check_fault(op: str, **info: Any) -> None:
+    """Consult the installed fault hook (no-op when none is set)."""
+    hook = _FAULT_HOOK[0]
+    if hook is not None:
+        hook(op, info)
+
+
+def with_retries(fn: Callable[[], Any], *, retries: int = 3,
+                 backoff_s: float = 0.0,
+                 sleep: Callable[[float], None] = time.sleep,
+                 on_retry: Optional[Callable[[int, Exception], None]] = None,
+                 ) -> Any:
+    """Run ``fn`` with bounded retry-with-exponential-backoff on
+    ``PoolAccessError``.  Transient pool faults (the kind a real fabric
+    shrugs off with a replayed transaction) are absorbed here; a fault
+    that persists past ``retries`` attempts re-raises for the failure
+    monitor to confirm.  ``sleep`` is injectable so tests and the
+    emulated step loop never actually block."""
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except PoolAccessError as exc:
+            attempt += 1
+            if attempt > retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            if backoff_s > 0.0:
+                sleep(backoff_s * (2 ** (attempt - 1)))
 
 
 class PoolEmulator:
@@ -37,6 +106,8 @@ class PoolEmulator:
 
     def write(self, op: sched.TransferOp, src: np.ndarray) -> None:
         assert op.kind is sched.OpKind.WRITE
+        check_fault("write", rank=op.rank, offset=op.pool_offset,
+                    size=op.size)
         data = src[op.buf_offset:op.buf_offset + op.size]
         if self.device_of(op.pool_offset) != op.device:
             raise AssertionError(
@@ -50,6 +121,8 @@ class PoolEmulator:
                  dtype: np.dtype) -> bool:
         """Attempt the read; returns False if the doorbell is still STALE."""
         assert op.kind is sched.OpKind.READ
+        check_fault("read", rank=op.rank, offset=op.pool_offset,
+                    size=op.size)
         if not self.doorbells.is_ready(op.doorbell):
             return False
         chunk = self.pool[op.pool_offset:op.pool_offset + op.size]

@@ -28,6 +28,17 @@ injects link slowdowns), or ``profiler`` (parse ``jax.profiler``
 traces; falls back to ``step`` if the build emits none).  With
 ``--online-retune``, emulator/profiler sources feed the tuner
 *candidate-level* measurements instead of step-time apportioning.
+
+Resilience (repro.resilience): ``--fault-plan`` injects a seeded fault
+schedule (rank deaths / link degrades / pool-error windows) through
+the emulator degrade hooks and the pool fault shim; ``--resilience``
+runs the closed detect -> re-plan -> resume loop around it —
+heartbeat/health monitoring each step, an automatic survivor or
+failover re-plan hot-swapped on confirmation, and a warm rollback to
+the newest pool-resident snapshot (``--pool-ckpt-interval``).
+``--ewma-decay``/``--explore-eps`` let the online tuner walk back to
+calibrated oracle predictions after a fault heals (see
+docs/RESILIENCE.md).
 """
 from __future__ import annotations
 
@@ -119,10 +130,40 @@ def main() -> None:
     ap.add_argument("--emu-degrade", default=None,
                     help="'key=factor,...' slowdowns for the emulator "
                          "timing source; keys are level axes ('node'), "
-                         "fabric kinds ('cxl'), or '*'")
+                         "fabric kinds ('cxl'), backend-qualified "
+                         "'node@cxl', or '*'")
+    ap.add_argument("--resilience", action="store_true",
+                    help="run the detect -> re-plan -> resume loop "
+                         "(repro.resilience): heartbeat + link-health "
+                         "monitoring each step; on a confirmed rank "
+                         "death or persistent cxl degrade, hot-swap a "
+                         "survivor/failover re-plan and roll back to "
+                         "the newest pool snapshot")
+    ap.add_argument("--fault-plan", default=None,
+                    help="seeded fault schedule, e.g. "
+                         "'rank_death@12:rank=5;link_degrade@10-18:"
+                         "link=node@cxl,factor=4;pool_error@5-7:"
+                         "rate=0.5' (repro.resilience.FaultPlan)")
+    ap.add_argument("--pool-ckpt-interval", type=int, default=0,
+                    help="steps between pool-resident snapshots "
+                         "(training.checkpoint.PoolCheckpointStore); "
+                         "0 disables; the resume half of --resilience "
+                         "rolls back to the newest committed snapshot")
+    ap.add_argument("--ewma-decay", type=float, default=0.0,
+                    help="per-refresh decay of the online tuner's "
+                         "measured EWMAs (and calibration) toward the "
+                         "oracle, so post-fault costs un-learn "
+                         "(requires --online-retune)")
+    ap.add_argument("--explore-eps", type=float, default=0.0,
+                    help="epsilon-greedy re-exploration of measured "
+                         "plan cells at refresh (requires "
+                         "--online-retune)")
     args = ap.parse_args()
     if args.online_retune and args.backend != "auto":
         ap.error("--online-retune requires --backend auto")
+    if (args.ewma_decay or args.explore_eps) and not args.online_retune:
+        ap.error("--ewma-decay/--explore-eps tune the online tuner; "
+                 "add --online-retune")
     if args.timing_source != "step" and args.backend != "auto":
         ap.error("--timing-source emulator/profiler needs the "
                  "--backend auto audit to key samples to plan cells")
@@ -191,7 +232,8 @@ def main() -> None:
         base = tuner.ensure_default_plan(
             topology=get_active_topology())
         online = tuner.OnlineTuner(
-            base, retune_interval=args.retune_interval)
+            base, retune_interval=args.retune_interval,
+            decay=args.ewma_decay, explore_eps=args.explore_eps)
         print(f"online re-tuning: interval {args.retune_interval} "
               f"steps, plan epoch {tuner.plan_epoch()}")
 
@@ -221,11 +263,42 @@ def main() -> None:
                     or (obs_sess is not None
                         and args.backend == "auto"))
 
+    fault_plan = None
+    if args.fault_plan:
+        from repro.resilience import FaultPlan
+        fault_plan = FaultPlan.parse(args.fault_plan)
+        fault_plan.install()        # pool fault hook: deaths + errors
+        print(f"fault plan: {fault_plan.describe()}")
+    resil = None
+    if args.resilience:
+        from repro.resilience import (FailureMonitor,
+                                      ResilienceController)
+        monitor = FailureMonitor(int(mesh.devices.size))
+        resil = ResilienceController(monitor)
+        print(f"resilience: monitoring {monitor.nranks} ranks "
+              f"(heartbeat timeout {monitor.heartbeat_timeout}, "
+              f"patience {monitor.patience})")
+    pool_store = None
+    if args.pool_ckpt_interval > 0:
+        import numpy as np
+        from repro.training.checkpoint import PoolCheckpointStore
+        state_bytes = sum(
+            np.asarray(l).nbytes
+            for l in jax.tree.leaves({"params": params, "opt": opt}))
+        # two slots, each big enough for image + header slack
+        pool_store = PoolCheckpointStore(
+            capacity_bytes=2 * (state_bytes + (1 << 20)) + 4096)
+        print(f"pool checkpoints: every {args.pool_ckpt_interval} "
+              f"steps, {pool_store.slot_bytes} B/slot")
+
     print(f"training {cfg.name} on mesh {dict(mesh.shape)} "
           f"backend={args.backend}")
     t0 = time.time()
     profile = None       # trace-time auto_choices of the compiled step
     for i, batch in zip(range(args.steps), data):
+        if fault_plan is not None:
+            for ev in fault_plan.begin_step(i, emulator=emu):
+                print(f"step {i:5d} fault injected: {ev.describe()}")
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         ts = time.perf_counter()
         step_timings = None
@@ -307,6 +380,50 @@ def main() -> None:
         if obs_sess is not None:
             obs_sess.on_step(i, time.perf_counter() - ts,
                              timings=step_timings)
+        if pool_store is not None \
+                and i % args.pool_ckpt_interval == 0:
+            from repro.core.pool import PoolAccessError
+            try:
+                rep = pool_store.snapshot(
+                    i, {"params": params, "opt": opt})
+                if rep["retries"]:
+                    print(f"step {i:5d} pool snapshot committed "
+                          f"after {rep['retries']} retried faults")
+            except PoolAccessError as e:
+                # persists past the retry budget: the previous
+                # committed snapshot stays restorable
+                if resil is not None:
+                    resil.monitor.record_pool_error(i)
+                print(f"step {i:5d} pool snapshot failed: {e}")
+        if resil is not None:
+            rp = resil.step(i, timings=step_timings)
+            if rp is not None:
+                # resume: roll the survivors back to the newest
+                # committed pool snapshot (warm rejoin) and re-trace
+                # the step so auto resolution sees the new plan and
+                # topology.  The forced-host mesh keeps its devices;
+                # a true mesh shrink is exercised in
+                # tests/_mesh_runner.py.
+                snap = pool_store.latest() \
+                    if pool_store is not None else None
+                if snap is not None:
+                    like = {"params": params, "opt": opt}
+                    restored, _ = pool_store.restore(like)
+                    params, opt = restored["params"], restored["opt"]
+                    print(f"step {i:5d} resume: rolled back to pool "
+                          f"snapshot step {snap} "
+                          f"({i - snap} steps of rollback)")
+                ledger.reset()
+                profile = None
+                step, pspecs, bspecs, pc = make_sharded_train_step(
+                    cfg, tcfg, mesh, dp_axis=dp_axes(mesh))
+                if online is not None:
+                    # restart measured feedback from the recovery plan
+                    from repro import tuner
+                    online = tuner.OnlineTuner(
+                        rp.plan, retune_interval=args.retune_interval,
+                        decay=args.ewma_decay,
+                        explore_eps=args.explore_eps)
         ledger.clear_timings()    # folded; keep the list O(one step)
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
@@ -326,6 +443,14 @@ def main() -> None:
     if prof_dir is not None:
         import shutil
         shutil.rmtree(prof_dir, ignore_errors=True)
+    if fault_plan is not None:
+        fault_plan.uninstall()
+        print(f"faults injected: {len(fault_plan.injected)}")
+    if resil is not None:
+        rep = resil.report()
+        print(f"resilience: {rep['replans']} re-plan(s), "
+              f"dead ranks {rep['monitor']['dead_ranks']}, "
+              f"degraded links {rep['monitor']['degraded_links']}")
     if args.ckpt:
         checkpoint.save(args.ckpt, args.steps, {"params": params})
         print(f"saved {args.ckpt}/step_{args.steps:08d}")

@@ -53,6 +53,14 @@ class LinkState:
     def slowdown(self) -> float:
         return self.fast / self.baseline if self.baseline > 0.0 else 1.0
 
+    def degraded_for(self, step: int) -> int:
+        """Steps this link has been flagged degraded as of ``step``
+        (0 when healthy) - the persistence signal the resilience layer
+        uses to tell a transient wobble from a dead fabric."""
+        if not self.degraded or self.since_step is None:
+            return 0
+        return max(0, int(step) - int(self.since_step) + 1)
+
     def report(self) -> dict:
         return {"degraded": self.degraded,
                 "slowdown": round(self.slowdown(), 4),
@@ -172,6 +180,17 @@ class HealthMonitor:
 
     def degraded_links(self) -> list:
         return sorted(k for k, st in self.links.items() if st.degraded)
+
+    def link(self, key: str) -> "LinkState | None":
+        """The tracked state for one "axis/fabric" link, if any."""
+        return self.links.get(key)
+
+    def persistent_links(self, step: int, min_steps: int) -> list:
+        """Links degraded for at least ``min_steps`` consecutive steps
+        as of ``step`` - the promotion threshold at which the
+        resilience layer stops waiting for recovery and fails over."""
+        return sorted(k for k, st in self.links.items()
+                      if st.degraded_for(step) >= max(1, int(min_steps)))
 
 
 def calibration_drift(calibration: dict, *,

@@ -167,7 +167,11 @@ class StepEmulator:
     seeded multiplicative noise - i.e. "what a profiler would have
     measured on hardware that matches the oracle, except where we say
     it doesn't".  ``degrade`` keys are level axis names (``"node"``),
-    fabric kinds (``"cxl"``), or ``"*"``; factors multiply.
+    fabric kinds (``"cxl"``), or ``"*"``; factors multiply.  A
+    backend-qualified key (``"node@cxl"``, ``"cxl@cxl"``) hits only
+    choices *executing* that backend on the level/fabric - the shape
+    of a pool-side fault, which slows the pool transport but not the
+    ring alternative riding the level's IB config.
     """
 
     def __init__(self, *, topology=None, noise_std: float = 0.0,
@@ -184,12 +188,17 @@ class StepEmulator:
         else:
             self.degrade[key] = float(factor)
 
-    def _factor(self, level: "str | None", fabric: "str | None") -> float:
+    def _factor(self, level: "str | None", fabric: "str | None",
+                backend: "str | None" = None) -> float:
         f = self.degrade.get("*", 1.0)
         if level is not None:
             f *= self.degrade.get(level, 1.0)
         if fabric is not None:
             f *= self.degrade.get(fabric, 1.0)
+        if backend is not None:
+            for base in (level, fabric):
+                if base is not None:
+                    f *= self.degrade.get(f"{base}@{backend}", 1.0)
         return f
 
     def time_choice(self, choice: dict) -> float:
@@ -210,7 +219,8 @@ class StepEmulator:
                 int(choice["nranks"]), int(choice["msg_bytes"]),
                 slicing_factor=int(choice["slicing_factor"]),
                 allreduce_mode=choice["allreduce_mode"])
-        t *= self._factor(axis, choice.get("fabric"))
+        t *= self._factor(axis, choice.get("fabric"),
+                          choice.get("backend"))
         if self.noise_std > 0.0:
             t *= float(np.clip(self._rng.normal(1.0, self.noise_std),
                                0.5, 2.0))

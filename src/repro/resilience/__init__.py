@@ -1,0 +1,40 @@
+"""Fault tolerance and elastic reconfiguration.
+
+The recovery loop, end to end and operator-free:
+
+* inject  — ``FaultPlan`` (seeded rank deaths / link degrades / pool
+  errors) through the emulator degrade hooks and the ``core.pool``
+  fault shim;
+* detect  — ``FailureMonitor``: pool-side heartbeats + link-health
+  EWMAs + pool-error streaks, promoted to confirmed ``Failure``s
+  under explicit timeout/patience;
+* re-plan — ``replan``/``survivor_topology``/``failover_topology``:
+  ragged survivor shapes, cxl->ib level failover, placement re-ranked
+  under measured link penalties, hot-swapped through the
+  epoch-versioned registry;
+* resume  — pool-resident checkpoints
+  (``training.checkpoint.PoolCheckpointStore``) roll the survivors
+  back warm; ``ResilienceController`` sequences all of it from inside
+  a step loop.
+
+See ``docs/RESILIENCE.md`` for the failure model and knobs.
+"""
+from repro.resilience.controller import ResilienceController
+from repro.resilience.faults import FaultEvent, FaultPlan
+from repro.resilience.monitor import Failure, FailureMonitor
+from repro.resilience.replan import (RecoveryPlan, failover_topology,
+                                     health_penalties, replan,
+                                     survivor_topology)
+
+__all__ = [
+    "FaultEvent",
+    "FaultPlan",
+    "Failure",
+    "FailureMonitor",
+    "RecoveryPlan",
+    "ResilienceController",
+    "failover_topology",
+    "health_penalties",
+    "replan",
+    "survivor_topology",
+]

@@ -1,18 +1,33 @@
 """Checkpointing: pytree save/restore without external deps.
 
-Layout: ``<dir>/step_<n>/arrays.npz`` (flattened leaves, keyed by index)
-plus ``tree.json`` (the treedef paths + leaf dtypes/shapes) and
+Disk layout: ``<dir>/step_<n>/arrays.npz`` (flattened leaves, keyed by
+index) plus ``tree.json`` (the treedef paths + leaf dtypes/shapes) and
 ``meta.json``.  Restore rebuilds the exact pytree and validates shapes.
+``save`` is atomic: the snapshot is staged into ``step_<n>.tmp`` and
+renamed into place, so a rank dying mid-save never leaves a corrupt
+*latest* checkpoint — ``latest_step``/``restore`` skip ``.tmp``
+leftovers.
+
+``PoolCheckpointStore`` is the pool-resident variant: double-buffered
+snapshot slots in CXL pool memory, committed by a doorbell ring, priced
+by the pool cost model, so a restarted or re-admitted rank rejoins warm
+from pooled memory instead of cold disk.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
-from typing import Any, Optional
+import shutil
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 from jax.tree_util import DictKey, SequenceKey, tree_flatten_with_path
+
+from repro.core import pool as pool_mod
+from repro.core.doorbell import DoorbellRegion
+from repro.core.hw import CXLPoolConfig
 
 
 def _path_str(path) -> str:
@@ -29,33 +44,58 @@ def _path_str(path) -> str:
 
 def save(ckpt_dir: str, step: int, tree: Any,
          meta: Optional[dict] = None) -> str:
+    """Atomic save: stage into ``step_<n>.tmp``, rename into place."""
     out = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(out, exist_ok=True)
+    tmp = out + ".tmp"
+    if os.path.isdir(tmp):  # stale leftover from a died rank
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     flat, treedef = tree_flatten_with_path(tree)
     arrays = {}
     index = []
     for i, (path, leaf) in enumerate(flat):
         arrays[f"a{i}"] = np.asarray(leaf)
         index.append(_path_str(path))
-    np.savez(os.path.join(out, "arrays.npz"), **arrays)
-    with open(os.path.join(out, "tree.json"), "w") as f:
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "tree.json"), "w") as f:
         json.dump({"paths": index}, f)
-    with open(os.path.join(out, "meta.json"), "w") as f:
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, **(meta or {})}, f)
+    if os.path.isdir(out):  # re-save of the same step
+        shutil.rmtree(out)
+    os.rename(tmp, out)  # the commit point
     return out
+
+
+def _step_of(name: str) -> Optional[int]:
+    """Step index of a committed checkpoint dir name, else None
+    (``.tmp`` staging leftovers and strangers are not checkpoints)."""
+    if not name.startswith("step_") or name.endswith(".tmp"):
+        return None
+    try:
+        return int(name.split("_", 1)[1])
+    except ValueError:
+        return None
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_")]
+    steps = [s for d in os.listdir(ckpt_dir)
+             if (s := _step_of(d)) is not None]
     return max(steps) if steps else None
 
 
 def restore(ckpt_dir: str, step: int, like: Any) -> Any:
-    """Restore into the structure of ``like`` (validates paths+shapes)."""
+    """Restore into the structure of ``like`` (validates paths+shapes).
+
+    Only committed checkpoints are eligible; a ``step_<n>.tmp``
+    leftover from an interrupted save is never read."""
     src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not os.path.isdir(src):
+        hint = (" (a .tmp staging dir exists: the save was interrupted "
+                "before commit)" if os.path.isdir(src + ".tmp") else "")
+        raise FileNotFoundError(f"no committed checkpoint at {src}{hint}")
     with open(os.path.join(src, "tree.json")) as f:
         saved_paths = json.load(f)["paths"]
     data = np.load(os.path.join(src, "arrays.npz"))
@@ -81,3 +121,182 @@ def restore(ckpt_dir: str, step: int, like: Any) -> Any:
 def load_meta(ckpt_dir: str, step: int) -> dict:
     with open(os.path.join(ckpt_dir, f"step_{step:08d}", "meta.json")) as f:
         return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Pool-resident checkpointing
+
+
+def _serialize_tree(step: int, tree: Any,
+                    meta: Optional[dict]) -> tuple[bytes, bytes]:
+    """(header, payload): a self-describing snapshot byte image."""
+    flat, _ = tree_flatten_with_path(tree)
+    leaves, entries, off = [], [], 0
+    for path, leaf in flat:
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        raw = arr.tobytes()
+        entries.append({"path": _path_str(path), "dtype": str(arr.dtype),
+                        "shape": list(arr.shape), "offset": off,
+                        "nbytes": len(raw)})
+        leaves.append(raw)
+        off += len(raw)
+    header = json.dumps({"step": step, "leaves": entries,
+                         "meta": meta or {}}).encode()
+    return header, b"".join(leaves)
+
+
+@dataclasses.dataclass
+class PoolCheckpointStore:
+    """Double-buffered, doorbell-committed snapshots in CXL pool memory.
+
+    Layout (paper-style index calculation, no allocator): the region
+    begins with a ``DoorbellRegion`` of ``slots`` commit words; the
+    remaining capacity is split into ``slots`` equal snapshot slots.
+    Each snapshot is a self-describing byte image — an 8-byte header
+    length, a JSON header (step, leaf paths/dtypes/shapes/offsets,
+    user meta), then the raw leaf bytes.
+
+    Write protocol: pick the slot NOT holding the newest committed
+    snapshot, reset its doorbell (mark STALE), stream the image into
+    the slot through the pool fault shim with bounded
+    retry-with-backoff (``core.pool.with_retries``), then ring the
+    doorbell — the commit point.  A rank dying mid-write leaves the
+    other slot's committed snapshot intact, so ``restore`` always sees
+    a consistent image; double buffering is what makes the pool store
+    crash-safe without a rename primitive.
+
+    Each ``snapshot`` returns a report priced by the pool cost model
+    (per-leaf copy overhead + bytes over the pool server bandwidth +
+    the doorbell commit), so planners can budget checkpoint cadence
+    against step time.
+    """
+
+    capacity_bytes: int = 64 * 1024 * 1024
+    slots: int = 2
+    cfg: CXLPoolConfig = dataclasses.field(default_factory=CXLPoolConfig)
+    retries: int = 3
+    backoff_s: float = 0.0
+    sleep: Callable[[float], None] = lambda _s: None
+
+    def __post_init__(self) -> None:
+        if self.slots < 2:
+            raise ValueError("need >= 2 slots for crash-safe commits")
+        self.doorbells = DoorbellRegion(self.slots)
+        usable = self.capacity_bytes - self.doorbells.region_bytes
+        self.slot_bytes = usable // self.slots
+        if self.slot_bytes <= 0:
+            raise ValueError("pool checkpoint capacity too small")
+        self._pool = np.zeros(self.capacity_bytes, dtype=np.uint8)
+        self._slot_step: list[int] = [-1] * self.slots  # committed steps
+        self.retried = 0  # transient pool faults absorbed by retries
+
+    # -- addressing -------------------------------------------------------
+    def slot_offset(self, slot: int) -> int:
+        return self.doorbells.region_bytes + slot * self.slot_bytes
+
+    def _next_slot(self) -> int:
+        """The slot to overwrite: the one NOT holding the newest
+        committed snapshot (round-robin over stale slots)."""
+        newest = max(range(self.slots), key=lambda s: self._slot_step[s])
+        return (newest + 1) % self.slots
+
+    # -- pool access through the fault shim -------------------------------
+    def _store(self, rank: int, offset: int, raw: bytes) -> None:
+        def attempt() -> None:
+            pool_mod.check_fault("ckpt_write", rank=rank, offset=offset,
+                                 size=len(raw))
+            self._pool[offset:offset + len(raw)] = np.frombuffer(
+                raw, dtype=np.uint8)
+
+        def note(_attempt: int, _exc: Exception) -> None:
+            self.retried += 1
+
+        pool_mod.with_retries(attempt, retries=self.retries,
+                              backoff_s=self.backoff_s, sleep=self.sleep,
+                              on_retry=note)
+
+    def _load(self, rank: int, offset: int, nbytes: int) -> bytes:
+        def attempt() -> bytes:
+            pool_mod.check_fault("ckpt_read", rank=rank, offset=offset,
+                                 size=nbytes)
+            return bytes(self._pool[offset:offset + nbytes])
+
+        return pool_mod.with_retries(attempt, retries=self.retries,
+                                     backoff_s=self.backoff_s,
+                                     sleep=self.sleep)
+
+    # -- cost model -------------------------------------------------------
+    def predict_write_s(self, total_bytes: int, n_leaves: int) -> float:
+        """Pool cost model for one snapshot: per-leaf memcpy setup, the
+        image over the pool server link, one doorbell commit."""
+        c = self.cfg
+        return (n_leaves * c.memcpy_overhead
+                + total_bytes / c.server_bw
+                + c.doorbell_latency)
+
+    # -- public API -------------------------------------------------------
+    def snapshot(self, step: int, tree: Any, meta: Optional[dict] = None,
+                 rank: int = 0) -> dict:
+        """Write a snapshot of ``tree`` into the stale slot and commit.
+
+        Raises ``PoolAccessError`` only if a fault persists past the
+        retry budget; the previous committed snapshot stays readable
+        either way."""
+        header, payload = _serialize_tree(step, tree, meta)
+        image = (len(header).to_bytes(8, "little") + header + payload)
+        if len(image) > self.slot_bytes:
+            raise ValueError(
+                f"snapshot needs {len(image)} bytes > slot capacity "
+                f"{self.slot_bytes}; raise capacity_bytes")
+        slot = self._next_slot()
+        before = self.retried
+        self.doorbells.reset(slot)          # in-flight: not restorable
+        self._store(rank, self.slot_offset(slot), image)
+        self.doorbells.ring(slot)           # the commit point
+        self._slot_step[slot] = step
+        n_leaves = len(json.loads(header)["leaves"])
+        return {"slot": slot, "step": step, "bytes": len(image),
+                "leaves": n_leaves, "retries": self.retried - before,
+                "predicted_write_s": self.predict_write_s(
+                    len(image), n_leaves)}
+
+    def latest(self) -> Optional[int]:
+        """Newest committed (doorbell READY) snapshot step, or None."""
+        steps = [self._slot_step[s] for s in range(self.slots)
+                 if self.doorbells.is_ready(s) and self._slot_step[s] >= 0]
+        return max(steps) if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                rank: int = 0) -> tuple[Any, dict]:
+        """Restore the snapshot for ``step`` (default: newest committed)
+        into the structure of ``like``; returns ``(tree, meta)``."""
+        if step is None:
+            step = self.latest()
+            if step is None:
+                raise LookupError("no committed pool snapshot")
+        cands = [s for s in range(self.slots)
+                 if self._slot_step[s] == step and self.doorbells.is_ready(s)]
+        if not cands:
+            raise LookupError(f"no committed pool snapshot for step {step}")
+        base = self.slot_offset(cands[0])
+        hlen = int.from_bytes(self._load(rank, base, 8), "little")
+        doc = json.loads(self._load(rank, base + 8, hlen))
+        payload_base = base + 8 + hlen
+        flat, _ = tree_flatten_with_path(like)
+        if len(flat) != len(doc["leaves"]):
+            raise ValueError(
+                f"pool snapshot has {len(doc['leaves'])} leaves, target "
+                f"structure has {len(flat)}")
+        leaves = []
+        for i, (path, leaf) in enumerate(flat):
+            ent = doc["leaves"][i]
+            if _path_str(path) != ent["path"]:
+                raise ValueError(
+                    f"leaf {i} path mismatch: snapshot {ent['path']!r} vs "
+                    f"target {_path_str(path)!r}")
+            raw = self._load(rank, payload_base + ent["offset"],
+                             ent["nbytes"])
+            arr = np.frombuffer(raw, dtype=np.dtype(ent["dtype"]))
+            leaves.append(arr.reshape(ent["shape"]).copy())
+        tree = jax.tree.unflatten(jax.tree.structure(like), leaves)
+        return tree, doc["meta"]

@@ -44,7 +44,7 @@ from repro.tuner.placement import (AxisTraffic, CollectiveCall,
                                    PlacementPlan, format_report,
                                    load_placement, mesh_spec,
                                    placed_topology, plan_placement,
-                                   save_placement)
+                                   predict_call_time, save_placement)
 from repro.tuner.plan import (Choice, Plan, PlanVersionError,
                               hardware_fingerprint, load_plan, save_plan,
                               size_bucket)
@@ -70,5 +70,6 @@ __all__ = [
     "OnlineTuner", "choices_changed", "fold_measurements",
     "AxisTraffic", "CollectiveCall", "CollectiveMix", "Placement",
     "PlacementPlan", "plan_placement", "placed_topology", "mesh_spec",
+    "predict_call_time",
     "format_report", "save_placement", "load_placement",
 ]

@@ -67,6 +67,8 @@ import dataclasses
 import re
 from typing import Optional
 
+import numpy as np
+
 from repro.core import mesh_collectives as mc
 from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
                            InfiniBandConfig)
@@ -166,18 +168,39 @@ class OnlineTuner:
     priced with at refresh time - deliberately the same (possibly
     miscalibrated) oracle the base plan was tuned with: measurements
     are the only source of truth the online layer adds.
+
+    Two recovery knobs, both off by default (a converged tuner with
+    default knobs refreshes to the identical plan, bit for bit):
+
+    * ``decay`` relaxes every measured EWMA toward the calibration-
+      corrected oracle at each refresh (and shrinks its effective
+      sample count), so a fabric that measured slow *while degraded*
+      does not carry that verdict forever - stale evidence fades and
+      the oracle regains its vote.
+    * ``explore_eps`` is epsilon-greedy exploration at refresh: with
+      probability eps per measured cell, the refreshed plan runs a
+      non-winning candidate instead of the argmin, so the recovered
+      fabric gets re-measured at all (pure exploitation never
+      re-executes a loser, hence never notices it recovered).
     """
 
     def __init__(self, plan: Plan, *, alpha: float = DEFAULT_ALPHA,
                  min_samples: int = DEFAULT_MIN_SAMPLES,
                  retune_interval: int = DEFAULT_RETUNE_INTERVAL,
                  calibration_min_samples: Optional[int] = None,
+                 decay: float = 0.0, explore_eps: float = 0.0,
+                 explore_seed: int = 0,
                  pool: CXLPoolConfig = CXL_POOL,
                  ib: InfiniBandConfig = INFINIBAND):
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"ewma alpha must be in (0, 1], got {alpha}")
         if retune_interval < 1:
             raise ValueError("retune_interval must be >= 1")
+        if not 0.0 <= decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1), got {decay}")
+        if not 0.0 <= explore_eps < 1.0:
+            raise ValueError(
+                f"explore_eps must be in [0, 1), got {explore_eps}")
         self.plan = plan
         self.alpha = float(alpha)
         self.min_samples = max(1, int(min_samples))
@@ -188,6 +211,10 @@ class OnlineTuner:
             if calibration_min_samples is None \
             else max(1, int(calibration_min_samples))
         self.retune_interval = int(retune_interval)
+        self.decay = float(decay)
+        self.explore_eps = float(explore_eps)
+        self._explore_rng = np.random.default_rng(explore_seed)
+        self.explored: list = []    # (refresh_count, key, candidate)
         self.pool = pool
         self.ib = ib
         self.grid = _grid_from_meta(plan.meta)
@@ -403,6 +430,42 @@ class OnlineTuner:
             * self.cal_scale(backend, lkey, key[0])
         return max(0.0, t - self.overlap_window), st
 
+    def _decay_stats(self) -> None:
+        """Relax every measured EWMA toward the calibration-corrected
+        oracle and shrink its effective sample count by ``decay``.
+
+        Run once per refresh.  Evidence gathered under a fault ages
+        out two ways: the EWMA value itself drifts back to what the
+        (calibrated) oracle says the candidate should cost, and the
+        shrinking sample count eventually drops below ``min_samples``,
+        at which point pricing falls back to the oracle entirely.
+        Fresh measurements re-anchor both - a candidate that is
+        *still* slow keeps getting re-measured slow by exploration, so
+        only stale verdicts fade."""
+        if self.decay <= 0.0:
+            return
+        for (key, cand), st in self.stats.items():
+            if st.samples <= 0.0:
+                continue
+            if UNKNOWN not in cand:
+                lkey = key[3] if len(key) == 4 else None
+                target = self._oracle_time(key, *cand) \
+                    * self.cal_scale(cand[0], lkey, key[0])
+                st.ewma_seconds += self.decay * (target
+                                                 - st.ewma_seconds)
+            st.samples *= (1.0 - self.decay)
+        # The calibration ratios fade with the per-cell evidence: a
+        # scale learned under a since-healed fault would otherwise
+        # reprice the oracle with the stale slowdown forever (and the
+        # EWMA decay above would converge to it rather than escape
+        # it).  Scale relaxes toward 1.0, support shrinks until it
+        # drops below cal_min_samples and the raw oracle votes again.
+        for cs in self.calibration.values():
+            if cs.samples <= 0.0:
+                continue
+            cs.scale += self.decay * (1.0 - cs.scale)
+            cs.samples *= (1.0 - self.decay)
+
     def _measured_keys(self) -> set:
         """Cell keys with at least one *real* candidate past
         min_samples (unknown-knob pseudo-candidates don't count: they
@@ -423,6 +486,8 @@ class OnlineTuner:
         resolves it exactly and the measured cost - not a neighboring
         bucket's oracle guess - drives the choice."""
         self.refresh_count += 1
+        self._decay_stats()
+        explored_before = len(self.explored)
         meta = dict(self.plan.meta)
         measured_cells = sum(
             1 for (key, cand), st in self.stats.items()
@@ -431,6 +496,9 @@ class OnlineTuner:
                           "min_samples": self.min_samples,
                           "refresh_count": self.refresh_count,
                           "measured_candidates": measured_cells}
+        if self.decay > 0.0 or self.explore_eps > 0.0:
+            meta["online"]["decay"] = self.decay
+            meta["online"]["explore_eps"] = self.explore_eps
         if self.calibration:
             meta["calibration"] = self.calibration_export()
         out = Plan(fingerprint=self.plan.fingerprint, meta=meta)
@@ -462,13 +530,26 @@ class OnlineTuner:
             best = None
             best_cost = None
             best_st = None
+            priced = {}
             for backend, factor, mode in _candidates(
                     key[0], self.grid, backends):
                 t, st = self.cost(key, backend, factor, mode)
+                priced[(backend, factor, mode)] = (t, st)
                 if best_cost is None or t < best_cost:
                     best = (backend, factor, mode)
                     best_cost = t
                     best_st = st
+            # epsilon-greedy: a measured cell occasionally runs a
+            # non-winning candidate so losers get re-measured (the
+            # only way the tuner can notice a fabric recovered)
+            if (self.explore_eps > 0.0 and key in measured_keys
+                    and len(priced) > 1
+                    and self._explore_rng.random() < self.explore_eps):
+                others = sorted(c for c in priced if c != best)
+                best = others[int(self._explore_rng.integers(
+                    len(others)))]
+                best_cost, best_st = priced[best]
+                self.explored.append((self.refresh_count, key, best))
             # unchanged choices keep their overlap pricing; a flipped
             # cell re-derives it from the constant window (zero when
             # the base plan was tuned in isolation)
@@ -490,6 +571,9 @@ class OnlineTuner:
                 sample_count=(int(round(best_st.samples))
                               if best_st is not None else 0),
                 ewma_alpha=self.alpha if best_st is not None else 0.0)
+        if len(self.explored) > explored_before:
+            meta["online"]["explored_cells"] = (len(self.explored)
+                                                - explored_before)
         return out
 
     # -- calibration + regret readouts ------------------------------------

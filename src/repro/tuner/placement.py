@@ -178,19 +178,41 @@ class CollectiveMix:
 # pricing one axis on one run of levels
 # --------------------------------------------------------------------- #
 
+def _link_penalty(level: Level, backend: str,
+                  penalties: Optional[dict]) -> float:
+    """Measured-slowdown multiplier for pricing ``backend`` on
+    ``level``.  Keys are "axis/fabric" (the link-health registry's
+    keying) or a bare fabric kind.  On a cxl level the ``ring``
+    backend is exempt: it rides the level's *alternative IB transport*
+    (``level.ib_cfg``), which does not share the pool's fault - that
+    exemption is what makes a penalized ranking fail over instead of
+    writing the level off."""
+    if not penalties:
+        return 1.0
+    if level.fabric == "cxl" and backend == "ring":
+        return 1.0
+    f = penalties.get(f"{level.axis}/{level.fabric}",
+                      penalties.get(level.fabric, 1.0))
+    return max(1.0, float(f))
+
+
 def _best_level_time(level: Level, primitive: str, nranks: int,
-                     msg_bytes: int) -> float:
+                     msg_bytes: int,
+                     penalties: Optional[dict] = None) -> float:
     """Cheapest backend the fabric can execute, under the level's own
-    oracle - what the per-level tuner sweep would resolve to."""
+    oracle (times any measured link penalty) - what the per-level
+    tuner sweep would resolve to."""
     if nranks <= 1 or msg_bytes <= 0:
         return 0.0
     return min(costmodel.predict_level_time(
         level, primitive, nranks, max(1, int(msg_bytes)), backend=b)
+        * _link_penalty(level, b, penalties)
         for b in level.backends())
 
 
 def _ragged_call_time(level: Level, parent: Optional[Level],
-                      primitive: str, msg_bytes: int) -> float:
+                      primitive: str, msg_bytes: int,
+                      penalties: Optional[dict] = None) -> float:
     """Predicted wire time of one collective on a ragged level: the
     grouped decomposition the Communicator actually runs (within-group
     schedule on this fabric, sub-root exchange on the parent fabric)."""
@@ -198,36 +220,39 @@ def _ragged_call_time(level: Level, parent: Optional[Level],
     s = max(1, int(msg_bytes))
     max_g, n_g, n = max(shape), len(shape), sum(shape)
     p = parent if parent is not None else level
+    pen = penalties
     if primitive == "all_reduce":
-        return (_best_level_time(level, "all_reduce", max_g, s)
-                + _best_level_time(p, "all_reduce", n_g, s)
-                + _best_level_time(level, "broadcast", max_g, s))
+        return (_best_level_time(level, "all_reduce", max_g, s, pen)
+                + _best_level_time(p, "all_reduce", n_g, s, pen)
+                + _best_level_time(level, "broadcast", max_g, s, pen))
     if primitive in ("all_gather", "gather"):
-        return (_best_level_time(level, "all_gather", max_g, s)
-                + _best_level_time(p, "all_gather", n_g, s * max_g)
-                + _best_level_time(level, "broadcast", max_g, s * n))
+        return (_best_level_time(level, "all_gather", max_g, s, pen)
+                + _best_level_time(p, "all_gather", n_g, s * max_g, pen)
+                + _best_level_time(level, "broadcast", max_g, s * n, pen))
     # flat single-axis fallback (what the Communicator executes for
     # the remaining primitives): all n ranks on whichever fabric is
     # slower - cross-group hops physically ride the parent fabric.
-    return max(_best_level_time(level, primitive, n, s),
-               _best_level_time(p, primitive, n, s))
+    return max(_best_level_time(level, primitive, n, s, pen),
+               _best_level_time(p, primitive, n, s, pen))
 
 
 def _run_call_time(levels_sizes: Sequence[tuple], primitive: str,
                    msg_bytes: int,
-                   parents: Optional[dict] = None) -> float:
+                   parents: Optional[dict] = None,
+                   penalties: Optional[dict] = None) -> float:
     """Predicted wire time of one collective on a run of levels
     (outermost first).  Single-level runs dispatch directly (ragged
     levels via the grouped decomposition); multi-level runs price the
     hierarchical decomposition the Communicator lowers tuple axes to.
     """
     s = max(1, int(msg_bytes))
+    pen = penalties
     if len(levels_sizes) == 1:
         level, n = levels_sizes[0]
         if level.grouped:
             parent = (parents or {}).get(level.axis)
-            return _ragged_call_time(level, parent, primitive, s)
-        return _best_level_time(level, primitive, n, s)
+            return _ragged_call_time(level, parent, primitive, s, pen)
+        return _best_level_time(level, primitive, n, s, pen)
     outer, n0 = levels_sizes[0]
     inner = list(levels_sizes[1:])
     prod_inner = 1
@@ -238,25 +263,25 @@ def _run_call_time(levels_sizes: Sequence[tuple], primitive: str,
         # AG back out (mc.hierarchical_all_reduce)
         t, seg = 0.0, float(s)
         for lv, n in reversed(inner):
-            t += _best_level_time(lv, "reduce_scatter", n, int(seg))
+            t += _best_level_time(lv, "reduce_scatter", n, int(seg), pen)
             seg /= n
-        t += _best_level_time(outer, "all_reduce", n0, int(seg))
+        t += _best_level_time(outer, "all_reduce", n0, int(seg), pen)
         for lv, n in inner:
-            t += _best_level_time(lv, "all_gather", n, int(seg))
+            t += _best_level_time(lv, "all_gather", n, int(seg), pen)
             seg *= n
         return t
     if primitive == "all_gather":
         # inner (minor) level first, payload grows level by level
         t, seg = 0.0, float(s)
         for lv, n in reversed(levels_sizes):
-            t += _best_level_time(lv, "all_gather", n, int(seg))
+            t += _best_level_time(lv, "all_gather", n, int(seg), pen)
             seg *= n
         return t
     if primitive == "reduce_scatter":
         # outer level first, payload shrinks before the next fabric
         t, seg = 0.0, float(s)
         for lv, n in levels_sizes:
-            t += _best_level_time(lv, "reduce_scatter", n, int(seg))
+            t += _best_level_time(lv, "reduce_scatter", n, int(seg), pen)
             seg /= n
         return t
     if primitive == "broadcast":
@@ -264,27 +289,46 @@ def _run_call_time(levels_sizes: Sequence[tuple], primitive: str,
         # the 1/prod(inner) pieces, allgather within every inner group
         t = 0.0
         for lv, n in inner:
-            t += _best_level_time(lv, "scatter", n, s)
+            t += _best_level_time(lv, "scatter", n, s, pen)
         t += _best_level_time(outer, "broadcast", n0,
-                              max(1, s // prod_inner))
+                              max(1, s // prod_inner), pen)
         for lv, n in inner:
             t += _best_level_time(lv, "all_gather", n,
-                                  max(1, s // prod_inner))
+                                  max(1, s // prod_inner), pen)
         return t
     # rooted recursion: full payload per level (conservative)
-    return sum(_best_level_time(lv, primitive, n, s)
+    return sum(_best_level_time(lv, primitive, n, s, pen)
                for lv, n in levels_sizes)
 
 
 def _axis_time(traffic: AxisTraffic, levels_sizes: Sequence[tuple],
-               parents: dict) -> float:
+               parents: dict,
+               penalties: Optional[dict] = None) -> float:
     """Predicted exposed seconds/step of one axis's traffic on a run."""
     total = 0.0
     for c in traffic.calls:
         wire = _run_call_time(levels_sizes, c.primitive, c.msg_bytes,
-                              parents=parents)
+                              parents=parents, penalties=penalties)
         total += max(0.0, wire - max(0.0, c.overlap_s)) * c.calls
     return total
+
+
+def predict_call_time(topology: Topology, axis: str, primitive: str,
+                      msg_bytes: int,
+                      penalties: Optional[dict] = None) -> float:
+    """Public single-call pricing: predicted wire seconds of one
+    collective over ``axis``'s level (ragged levels priced as the
+    grouped decomposition the Communicator actually runs), with
+    optional measured link penalties.  This is what the resilience
+    layer uses to compare a survivor/failover schedule's step time
+    against the healthy one without executing either."""
+    lv = topology.level_for(axis)
+    if lv is None:
+        raise KeyError(f"no level for axis {axis!r}")
+    parents = {lv.axis: topology.parent_of(lv.axis)}
+    n = lv.size if lv.size is not None else 2
+    return _run_call_time(((lv, n),), primitive, msg_bytes,
+                          parents=parents, penalties=penalties)
 
 
 # --------------------------------------------------------------------- #
@@ -467,7 +511,9 @@ def load_placement(path: str) -> PlacementPlan:
 
 
 def plan_placement(mix: CollectiveMix, topology: Topology, *,
-                   top_k: Optional[int] = None) -> PlacementPlan:
+                   top_k: Optional[int] = None,
+                   link_penalties: Optional[dict] = None
+                   ) -> PlacementPlan:
     """Enumerate and rank every feasible axis->level assignment.
 
     Each candidate is priced per axis with the tuner's per-level
@@ -475,8 +521,12 @@ def plan_placement(mix: CollectiveMix, topology: Topology, *,
     run as the hierarchical decomposition the Communicator lowers
     tuple axes to, and a ragged level as its grouped decomposition
     (cross-group sub-root traffic on the parent level's fabric).
-    Raises ``ValueError`` when no assignment fits (axis degrees vs
-    declared level sizes).
+    ``link_penalties`` ("axis/fabric" or bare fabric -> measured
+    slowdown multiplier, e.g. from ``tuner.runtime.get_link_health``)
+    re-ranks candidates against the fabric as it measures *now*: a
+    degraded pool loses its cells to the level's IB alternative or to
+    another level entirely.  Raises ``ValueError`` when no assignment
+    fits (axis degrees vs declared level sizes).
     """
     levels = topology.levels
     parents = {lv.axis: topology.parent_of(lv.axis) for lv in levels}
@@ -494,7 +544,7 @@ def plan_placement(mix: CollectiveMix, topology: Topology, *,
         total = 0.0
         for a, idxs in assign:
             sizes = _run_feasible(levels, idxs, a.size)
-            t = _axis_time(a, sizes, parents)
+            t = _axis_time(a, sizes, parents, penalties=link_penalties)
             per_axis.append((a.axis, t))
             total += t
         ordered = sorted(assign, key=lambda e: e[1][0])
@@ -516,7 +566,10 @@ def plan_placement(mix: CollectiveMix, topology: Topology, *,
         topology=topology, ranked=tuple(scored),
         meta={"axes": {a.axis: a.size for a in mix.axes},
               "bytes_per_step": {a.axis: a.bytes_per_step
-                                 for a in mix.axes}})
+                                 for a in mix.axes},
+              **({"link_penalties": {k: float(v) for k, v
+                                     in link_penalties.items()}}
+                 if link_penalties else {})})
 
 
 # --------------------------------------------------------------------- #

@@ -101,6 +101,39 @@ def clear_link_health() -> None:
     _LINK_HEALTH.clear()
 
 
+# -- rank-liveness registry (resilience.FailureMonitor publishes) ----------
+#
+# Keyed by global rank -> the monitor's latest verdict for that rank
+# ({"alive", "last_beat_step", "confirmed_step", ...}).  Mirrors the
+# link-health registry: plan-shaped advice living next to the plan,
+# consulted by planners deriving survivor topologies and by launchers
+# deciding whether a re-plan is due.
+
+_RANK_LIVENESS: dict = {}
+
+
+def set_rank_liveness(rank: int, state: dict) -> None:
+    _RANK_LIVENESS[int(rank)] = dict(state)
+
+
+def get_rank_liveness(rank: "int | None" = None):
+    """One rank's state dict (or None), or a copy of the whole registry
+    when called without a rank."""
+    if rank is None:
+        return {r: dict(v) for r, v in _RANK_LIVENESS.items()}
+    return _RANK_LIVENESS.get(int(rank))
+
+
+def dead_ranks() -> list:
+    """Ranks the failure monitor has *confirmed* dead, sorted."""
+    return sorted(r for r, v in _RANK_LIVENESS.items()
+                  if not v.get("alive", True))
+
+
+def clear_rank_liveness() -> None:
+    _RANK_LIVENESS.clear()
+
+
 def activate_plan_file(path: str, *,
                        pool: Optional[CXLPoolConfig] = None,
                        ib: Optional[InfiniBandConfig] = None,

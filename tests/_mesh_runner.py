@@ -12,7 +12,10 @@ Validates, for ring and cxl backends:
   5. bucketed sync_grads / fused FSDP gather numerics vs the per-leaf
      reference across TP x FSDP mesh shapes (bitwise for fp32 ring,
      allclose for cxl and bf16), including sub-FSDP_MIN_SIZE leaves;
-  6. obs metrics export reconciles exactly with ledger.snapshot().
+  6. obs metrics export reconciles exactly with ledger.snapshot();
+  7. elastic reconfiguration: a rank death mid-run -> confirmed by the
+     heartbeat monitor -> ragged survivor re-plan + mesh rebuild +
+     pool-snapshot rollback, allclose vs a flat 7-rank reference.
 """
 import os
 
@@ -482,6 +485,119 @@ def check_irregular_ragged() -> None:
     print("  irregular-ragged ok (4+2 vs flat, per-level ledger)")
 
 
+def check_survivor_reconfig() -> None:
+    """Elastic reconfiguration on real devices: an 8-rank
+    ``node:cxl:4+4`` data-parallel loop loses rank 5 mid-run.  The
+    heartbeat monitor confirms the death, ``resilience.replan``
+    produces the ragged ``4+3`` survivor topology (hot-swapped through
+    the registry), the mesh is rebuilt over the 7 surviving devices,
+    and state rolls back to the newest pool-resident snapshot.  The
+    continued (ragged, hierarchical) run must stay allclose to a fresh
+    flat single-axis 7-rank run from the same restored state, and the
+    post-failure ledger must attribute bytes to the survivor
+    topology's levels (within-group cxl + cross-group ib sub-root)."""
+    from repro import tuner
+    from repro.core import ledger
+    from repro.core.hw import CXLPoolConfig, InfiniBandConfig
+    from repro.core.topology import (Level, Topology,
+                                     set_active_topology)
+    from repro.resilience import (FailureMonitor, FaultPlan,
+                                  ResilienceController)
+    from repro.training.checkpoint import PoolCheckpointStore
+    from repro.tuner import runtime as tuner_runtime
+
+    # detached stream: the chaotic train-equivalence checks depend on
+    # the module RNG's draw order
+    rng = np.random.default_rng(31)
+    base_plan = tuner.get_active_plan()
+    topo8 = Topology(levels=(
+        Level("pod", "ib", ib=InfiniBandConfig(link_bw=2.5e9)),
+        Level("node", "cxl", pool=CXLPoolConfig(device_bw=18e9),
+              shape=(4, 4)),
+    ))
+
+    def make_step(mesh, axis, comm):
+        def step(p, x):
+            g = comm.all_reduce(x * p, axis)
+            piece = comm.reduce_scatter(g, axis)
+            return p - 0.1 * comm.all_gather(piece, axis)
+        return jax.jit(jax.shard_map(step, mesh=mesh,
+                                     in_specs=(P(), P(axis)),
+                                     out_specs=P(), check_vma=False))
+
+    mesh8 = jax.sharding.Mesh(np.asarray(jax.devices()[:8]), ("node",))
+    comm8 = Communicator(backend="cxl", topology=topo8)
+    step8 = make_step(mesh8, "node", comm8)
+    p = jnp.asarray(rng.standard_normal((56, 4)).astype(np.float32)
+                    * 1e-3)
+    store = PoolCheckpointStore(capacity_bytes=1 << 20)
+    mon = FailureMonitor(8)
+    ctrl = ResilienceController(mon, topology=topo8,
+                                log=lambda *_: None)
+    fp = FaultPlan.parse("rank_death@6:rank=5")
+    confirm_step = rp = None
+    with fp:
+        for i in range(12):
+            fp.begin_step(i)
+            x = rng.standard_normal((8 * 56, 4)).astype(np.float32)
+            p = step8(p, x)
+            if i % 2 == 0:
+                store.snapshot(i, {"p": p})
+            got = ctrl.step(i)
+            if got is not None:
+                confirm_step, rp = i, got
+                break
+    assert rp is not None, "rank death never confirmed"
+    lv = rp.topology.level_for("node")
+    assert lv.shape == (4, 3), lv.shape
+    snap = store.latest()
+    lost = ctrl.steps_lost(6, confirm_step, snap)
+    assert lost <= 8, (confirm_step, snap, lost)
+
+    # resume: survivors restore the snapshot and continue on a 7-rank
+    # mesh under the re-planned ragged topology (registry-resolved)
+    restored, _ = store.restore({"p": p})
+    p7 = jnp.asarray(restored["p"])
+    mesh7 = jax.sharding.Mesh(np.asarray(jax.devices()[:7]), ("node",))
+    comm7 = Communicator(backend="auto")    # recovery plan + topology
+    step7 = make_step(mesh7, "node", comm7)
+    ledger.reset()
+    xs = [rng.standard_normal((7 * 56, 4)).astype(np.float32)
+          for _ in range(3)]
+    p_ragged = p7
+    for x in xs:
+        p_ragged = step7(p_ragged, x)
+    snap7 = ledger.snapshot()
+    lvl = {k: sum(v.values())
+           for k, v in snap7["level_wire_bytes"].items()}
+    assert set(lvl) == {"node/cxl", "pod/ib"}, lvl
+    assert lvl["pod/ib"] < lvl["node/cxl"], lvl
+    audit = snap7["auto_choices"]
+    ns = {(a["level"], a["nranks"]) for a in audit}
+    # ragged 4+3: within-group schedules at the max group (4), the
+    # cross-group sub-root exchange at the group count (2)
+    assert ("node", 4) in ns and ("pod", 2) in ns, ns
+
+    # reference: fresh flat single-axis 7-rank run, same state + data
+    mesh7f = jax.sharding.Mesh(np.asarray(jax.devices()[:7]), ("x",))
+    flat = Communicator(backend="cxl")
+    stepf = make_step(mesh7f, "x", flat)
+    p_flat = p7
+    for x in xs:
+        p_flat = stepf(p_flat, x)
+    np.testing.assert_allclose(np.asarray(p_ragged),
+                               np.asarray(p_flat),
+                               rtol=1e-4, atol=1e-6)
+
+    # restore process-wide state for the checks that follow
+    tuner.set_active_plan(base_plan)
+    set_active_topology(None)
+    tuner_runtime.clear_rank_liveness()
+    print(f"  survivor-reconfig ok (confirm@{confirm_step}, "
+          f"rollback to {snap}, {lost} steps lost, ragged 4+3 "
+          f"allclose vs flat 7-rank)")
+
+
 def check_online_retune_hotswap() -> None:
     """Hot-swapping a measurement-refreshed plan mid-run must keep the
     numerics bitwise-identical to running the whole loop under the
@@ -680,6 +796,7 @@ if __name__ == "__main__":
     check_online_retune_hotswap()
     check_topology_hierarchical()
     check_irregular_ragged()
+    check_survivor_reconfig()
     # ring/cxl draw from the module RNG in the original order (the
     # chaotic train-equivalence checks below are sensitive to the global
     # draw sequence); the added checks use a detached stream.

@@ -100,6 +100,34 @@ def test_train_launcher_observability(tmp_path):
 
 
 @pytest.mark.slow
+def test_train_launcher_resilience():
+    """--resilience/--fault-plan/--pool-ckpt-interval end to end: the
+    injected rank death goes stale on its heartbeat, the monitor
+    confirms it at timeout+patience, the survivor re-plan hot-swaps,
+    and the loop resumes from the newest pool-resident snapshot."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "llama3.2-1b", "--smoke", "--steps", "12", "--batch", "4",
+         "--seq", "32", "--mesh", "2x4", "--backend", "auto",
+         "--topology", "pod:ib,node:cxl:4+4",
+         "--timing-source", "emulator", "--resilience",
+         "--fault-plan", "rank_death@6:rank=5",
+         "--pool-ckpt-interval", "2"],
+        env=_env(8), capture_output=True, text=True, timeout=1200,
+        cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "fault plan: rank_death@6:rank=5" in proc.stdout
+    assert "step     6 fault injected" in proc.stdout
+    # die@6 + heartbeat timeout 1 + patience 2 -> confirmed at step 8
+    assert ("[resilience] step 8: re-plan [survivors on node: -[5] "
+            "-> 4+3]" in proc.stdout)
+    assert "resume: rolled back to pool snapshot" in proc.stdout
+    assert "resilience: 1 re-plan(s), dead ranks [5]" in proc.stdout
+    # training carried on after the recovery
+    assert "step    11 loss" in proc.stdout
+
+
+@pytest.mark.slow
 def test_serve_launcher():
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-6b",
