@@ -1,0 +1,189 @@
+"""Fused collective+compute kernel benchmark
+(kernels.fused_collectives, EXPERIMENTS.md Sec. Fused kernels).
+
+Three readouts:
+
+* **Per-op modeled deltas** - for each fusable primitive
+  (reduce_scatter with an rmsnorm/AdamW epilogue, all_gather feeding
+  the consuming matmul) the unfused composition pays the collective,
+  then the epilogue, then the epilogue's HBM round-trip on the payload;
+  the fused kernel runs the epilogue in-register while the transfer
+  streams, so its cost is ``max(wire, epilogue)``.  Both sides are
+  priced by the same offline oracles the tuner uses
+  (``costmodel.predict_time`` / ``roofline_compute_time``), so the
+  speedups are deterministic and CI-gateable.
+* **Plan audit** - a window-free smoke sweep must resolve every
+  reduce_scatter/all_gather cell to its fused variant (the epilogue
+  window strictly widens what the transfer can hide behind), and plan
+  lookups must surface ``fused=True`` to ``backend='auto'``.
+* **Interpret-mode wall times** - the real Pallas kernels against
+  their unfused jnp compositions on tiny shapes, informational only
+  (``*_wall_s``): CPU interpret mode measures dispatch overhead, not
+  kernel quality, but catches gross pathologies.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import tuner
+from repro.core.hw import MiB
+from repro.kernels import ops, ref
+from repro.tuner import costmodel
+
+NRANKS = 8
+# Same H100 constants as benchmarks/overlap.py / llm_case_study.py.
+H100_FLOPS = 990e12
+H100_HBM_BW = 3.35e12
+MFU = 0.40
+TOKENS_PER_RANK = 2 * 4096
+SIZES_MB = (4, 64, 1024)
+SMOKE_SIZES_MB = (4, 64)
+
+
+def _wire(prim: str, msg_bytes: int) -> float:
+    """Best fixed-backend oracle time, like the tuner's argmin sees."""
+    t_ring = tuner.predict_time("ring", prim, NRANKS, msg_bytes)
+    t_cxl = tuner.predict_time("cxl", prim, NRANKS, msg_bytes,
+                               slicing_factor=4,
+                               allreduce_mode="two_phase")
+    return min(t_ring, t_cxl)
+
+
+def _epilogue_time(prim: str, msg_bytes: int) -> float:
+    """Roofline residency of the epilogue the fusion absorbs."""
+    return costmodel.roofline_compute_time(
+        costmodel.epilogue_flops(prim, msg_bytes),
+        peak_flops=H100_FLOPS * MFU, hbm_bw=H100_HBM_BW)
+
+
+def _hbm_round_trip(msg_bytes: int) -> float:
+    """The unfused composition's extra HBM traffic: the collective
+    writes its output and the epilogue reads it straight back."""
+    return costmodel.roofline_compute_time(
+        0.0, 2.0 * msg_bytes, peak_flops=H100_FLOPS * MFU,
+        hbm_bw=H100_HBM_BW)
+
+
+def _op_speedup(prim: str, msg_bytes: int) -> float:
+    wire = _wire(prim, msg_bytes)
+    epi = _epilogue_time(prim, msg_bytes)
+    unfused = wire + epi + _hbm_round_trip(msg_bytes)
+    fused = max(wire, epi)
+    return unfused / fused if fused > 0 else 1.0
+
+
+# --------------------------------------------------------------------- #
+# plan audit: fusion as a tuner candidate
+# --------------------------------------------------------------------- #
+
+def _plan_audit(emit, smoke: bool) -> None:
+    sizes = tuple(m * MiB for m in ((1, 16) if smoke else (1, 16, 256)))
+    grid = tuner.TuneGrid(sizes=sizes, nranks=(2, 3),
+                          slicing_factors=(1, 4))
+    # window-free sweep: exposed == wire time, so the fused variant's
+    # widened window strictly beats unfused in every RS/AG cell.  (A
+    # large constant window can fully hide small cells, where fused
+    # merely *ties* and the argmin keeps the unfused candidate.)
+    plan = tuner.generate_plan(grid)
+    fusable = total = 0
+    for (prim, _b, _n), ch in plan.entries.items():
+        if prim in ("reduce_scatter", "all_gather"):
+            total += 1
+            fusable += bool(ch.fused)
+        else:
+            assert not ch.fused, (prim, ch)
+    emit("fusion_plan_fused_cell_fraction",
+         fusable / total if total else 0.0,
+         f"{fusable}/{total} RS/AG cells resolved fused")
+    assert total and fusable == total, (
+        "the fused variant must win every RS/AG cell: its window "
+        f"strictly widens the unfused one ({fusable}/{total})")
+    # lookups surface the verdict to backend='auto'
+    ch = plan.lookup("reduce_scatter", 16 * MiB, 2)
+    assert ch.fused, ch
+    # v5 round-trip keeps it
+    again = tuner.Plan.from_json(plan.to_json())
+    assert again.lookup("reduce_scatter", 16 * MiB, 2).fused
+
+
+# --------------------------------------------------------------------- #
+# interpret-mode wall times (informational)
+# --------------------------------------------------------------------- #
+
+def _timed(fn, *args) -> float:
+    jax.block_until_ready(fn(*args))          # compile + warm
+    t0 = time.time()
+    jax.block_until_ready(fn(*args))
+    return time.time() - t0
+
+
+def _measured(emit) -> None:
+    rng = np.random.default_rng(0)
+    n, t, d = 4, 128, 256
+    shards = jnp.asarray(rng.normal(size=(n, t, d)), jnp.float32)
+    scale = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    emit("fusion_rs_rmsnorm_fused_wall_s",
+         _timed(jax.jit(lambda s, g: ops.reduce_scatter_rmsnorm(s, g)),
+                shards, scale),
+         f"pallas interpret, shards {n}x{t}x{d}")
+    emit("fusion_rs_rmsnorm_unfused_wall_s",
+         _timed(jax.jit(lambda s, g: ref.reduce_scatter_rmsnorm_ref(
+             s, g)), shards, scale),
+         "jnp reference composition, same shapes")
+
+    x = jnp.asarray(rng.normal(size=(t, n * 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, 64, d)), jnp.float32)
+    emit("fusion_ag_matmul_fused_wall_s",
+         _timed(jax.jit(lambda a, b: ops.all_gather_matmul(a, b)),
+                x, w),
+         f"pallas interpret, x {t}x{n * 64}, w {n}x64x{d}")
+    emit("fusion_ag_matmul_unfused_wall_s",
+         _timed(jax.jit(lambda a, b: ref.all_gather_matmul_ref(a, b)),
+                x, w),
+         "jnp reference composition, same shapes")
+
+
+# --------------------------------------------------------------------- #
+# entry point
+# --------------------------------------------------------------------- #
+
+def run(emit, smoke: bool = False) -> None:
+    sizes = SMOKE_SIZES_MB if smoke else SIZES_MB
+    for prim, tag in (("reduce_scatter", "rs"), ("all_gather", "ag")):
+        for mb in sizes:
+            sp = _op_speedup(prim, mb * MiB)
+            emit(f"fusion_{tag}_{mb}mb_speedup", sp,
+                 "fused kernel vs collective+epilogue+HBM round-trip, "
+                 f"modeled, {NRANKS} ranks")
+            assert sp >= 1.0, (prim, mb, sp)
+
+    # end-to-end: one modeled llama3-8b FSDP step.  The AdamW update is
+    # the grad ReduceScatter's epilogue; fusing it makes the optimizer
+    # tail cost max(rs, adamw) instead of rs + adamw + round-trip, and
+    # the gather-side fusion deletes the gathered-weights HBM bounce.
+    from repro.configs import get_config
+    from repro.models import model
+    cfg = get_config("llama3-8b")
+    params = float(sum(int(np.prod(x.shape)) for x in
+                       jax.tree.leaves(model.abstract_params(cfg, tp=1))))
+    ag_bytes = 2.0 * params                   # bf16 weights on the wire
+    rs_bytes = 4.0 * params                   # f32 grads
+    compute = costmodel.roofline_compute_time(
+        6.0 * params * TOKENS_PER_RANK, peak_flops=H100_FLOPS * MFU)
+    t_ag = _wire("all_gather", int(ag_bytes))
+    t_rs = _wire("reduce_scatter", int(rs_bytes))
+    epi = _epilogue_time("reduce_scatter", int(rs_bytes))
+    base = compute + t_ag + _hbm_round_trip(int(ag_bytes)) \
+        + t_rs + epi + _hbm_round_trip(int(rs_bytes))
+    fused = compute + t_ag + max(t_rs, epi)
+    emit("fusion_llama3_8b_step_speedup", base / fused,
+         "modeled FSDP step: fused AG prologue + RS/AdamW epilogue "
+         "vs unfused composition")
+    assert base / fused >= 1.0
+
+    _plan_audit(emit, smoke)
+    _measured(emit)

@@ -8,6 +8,9 @@ Prints ``name,value,notes`` CSV.  Modules:
   llm      - FSDP Llama-3-8B case study (Sec. 5.5)
   autotune - plan-driven backend='auto' vs fixed backends
   overlap  - bucketed+prefetched FSDP step vs per-leaf serialized
+  fusion   - fused collective+compute kernels vs unfused composition
+             (per-op modeled deltas, the plan's fused-cell audit,
+             interpret-mode wall times)
   topology - hierarchical decomposition vs flat per-level recursion on
              a 3-level (pod/node/gpu) multi-fabric topology
   retune   - online re-tuning convergence under a 4x mis-calibrated
@@ -34,9 +37,9 @@ import json
 import time
 
 from benchmarks import (autotune, fig3_characterization, fig9_collectives,
-                        fig10_scalability, fig11_chunks, llm_case_study,
-                        observability, overlap, placement, resilience,
-                        retune, topology)
+                        fig10_scalability, fig11_chunks, fusion,
+                        llm_case_study, observability, overlap, placement,
+                        resilience, retune, topology)
 
 MODULES = [
     ("fig3", fig3_characterization),
@@ -46,6 +49,7 @@ MODULES = [
     ("llm", llm_case_study),
     ("autotune", autotune),
     ("overlap", overlap),
+    ("fusion", fusion),
     ("topology", topology),
     ("retune", retune),
     ("placement", placement),
@@ -53,8 +57,8 @@ MODULES = [
     ("resilience", resilience),
 ]
 
-SMOKE_MODULES = ("fig3", "autotune", "overlap", "topology", "retune",
-                 "placement", "observability", "resilience")
+SMOKE_MODULES = ("fig3", "autotune", "overlap", "fusion", "topology",
+                 "retune", "placement", "observability", "resilience")
 
 
 def main() -> None:

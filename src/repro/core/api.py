@@ -39,17 +39,30 @@ hierarchical decomposition - untagged - for ``cxl``/``auto``.
 
 **Irregular (ragged) levels**: a topology level with a grouped shape
 vector (``Level(shape=(4, 2))`` - mixed per-pod fan-out) lives on one
-*flat* mesh axis of ``sum(shape)`` ranks.  AllReduce / AllGather /
-Gather over such an axis decompose into the grouped schedules of
-``core.mesh_collectives`` (within-group masked rings on this level's
-fabric, a per-pod sub-root exchange on the *parent* level's fabric,
-padding-free gather concatenation), with the ledger attributing the
-cross-group bytes to the parent level.  The grouped schedules are
-ppermute programs regardless of the resolved backend (``lax.psum``
-cannot reduce over a subgroup of a named axis), so on ragged levels
-the plan's choice steers the slicing factor and the audit, not the
-lowering.  The remaining primitives run the flat single-axis path on
-a ragged axis - numerically correct, hierarchy-blind.
+*flat* mesh axis of ``sum(shape)`` ranks.  AllReduce / ReduceScatter /
+AllGather / Gather over such an axis decompose into the grouped
+schedules of ``core.mesh_collectives`` (within-group masked rings on
+this level's fabric, a per-pod sub-root exchange on the *parent*
+level's fabric, padding-free assembly), with the ledger attributing
+the cross-group bytes to the parent level.  In particular the ragged
+``reduce_scatter`` keeps the hierarchical decomposition for ragged
+FSDP grad-sync and the two-phase AllReduce - there is no flat
+fallback left for RS/AR.  The grouped schedules are ppermute programs
+regardless of the resolved backend (``lax.psum`` cannot reduce over a
+subgroup of a named axis), so on ragged levels the plan's choice
+steers the slicing factor and the audit, not the lowering.  The
+primitives that still run the flat single-axis path on a ragged axis
+(all_to_all, broadcast, reduce, scatter) are numerically correct but
+hierarchy-blind, and every such call books an explicit
+``ledger.record_fallback`` event - never a silent degradation.
+
+**Fused kernels**: plan cells carry a ``fused`` knob (format v5) - the
+tuner's prediction that the collective's epilogue/prologue compute is
+worth folding into the transfer (``kernels.fused_collectives``).  The
+resolved flag rides the audit trail and the ledger's fused-byte split;
+the training stack acts on it through ``TrainConfig.fuse_kernels``
+(the FSDP gather feeds ``layers.dense`` rank-major shard stacks that
+``kernels.ops.fused_dense`` consumes).
 """
 from __future__ import annotations
 
@@ -118,16 +131,21 @@ class Communicator:
 
     def _choice(self, primitive: str, msg_bytes: int, n: int,
                 topo: Optional[topo_mod.Topology] = None,
-                ax: Optional[str] = None) -> tuple[str, int, str, bool]:
-        """Resolve (backend, slicing_factor, allreduce_mode, overlap) for
-        one collective call at one topology level.  Static under ``jit``
-        (sizes and axis sizes are trace-time constants), so this costs
-        nothing at run time.  ``overlap`` is True when an overlap-aware
-        plan tuned this cell against the compute it expects to hide
-        behind; the ledger then books the wire bytes as hidden."""
+                ax: Optional[str] = None
+                ) -> tuple[str, int, str, bool, bool]:
+        """Resolve (backend, slicing_factor, allreduce_mode, overlap,
+        fused) for one collective call at one topology level.  Static
+        under ``jit`` (sizes and axis sizes are trace-time constants),
+        so this costs nothing at run time.  ``overlap`` is True when an
+        overlap-aware plan tuned this cell against the compute it
+        expects to hide behind; the ledger then books the wire bytes as
+        hidden.  ``fused`` is True when the plan priced the cell with
+        its epilogue/prologue compute folded into a fused kernel
+        (``kernels.fused_collectives``); the flag rides the audit trail
+        and tags the wire bytes into the ledger's fused split."""
         if self.backend != "auto":
             return (self.backend, self.slicing_factor,
-                    self.allreduce_mode, False)
+                    self.allreduce_mode, False, False)
         plan = self.plan
         epoch = None
         if plan is None:
@@ -145,13 +163,15 @@ class Communicator:
         lkey = topo.level_key(ax) if level is not None else None
         ch = plan.lookup(primitive, msg_bytes, n, level=lkey)
         if ch is None:     # primitive absent from the plan: ring baseline
-            backend, factor, mode, overlap = (
-                "ring", self.slicing_factor, self.allreduce_mode, False)
+            backend, factor, mode, overlap, fz = (
+                "ring", self.slicing_factor, self.allreduce_mode, False,
+                False)
             pred = base = 0.0
         else:
             backend, factor, mode, overlap = (
                 ch.backend, ch.slicing_factor, ch.allreduce_mode,
                 ch.overlap)
+            fz = bool(getattr(ch, "fused", False))
             # measured-over-oracle: a refined (v4) plan cell's measured
             # EWMA is a better per-launch estimate than the oracle, so
             # the audit (and everything downstream of it: step-time
@@ -168,15 +188,18 @@ class Communicator:
             backend = "ring"
         ledger.record_choice(
             primitive, msg_bytes, n, backend, factor, mode,
-            overlap=overlap, level=ax if level is not None else None,
+            overlap=overlap, fused=fz,
+            level=ax if level is not None else None,
             fabric=level.fabric if level is not None else None,
             predicted_time=pred, baseline_time=base, plan_epoch=epoch)
-        return backend, factor, mode, overlap
+        return backend, factor, mode, overlap, fz
 
     def _rec(self, kind: str, wire: float, ov: bool,
-             topo: Optional[topo_mod.Topology], ax: str) -> None:
+             topo: Optional[topo_mod.Topology], ax: str,
+             fz: bool = False) -> None:
         level = topo.level_for(ax) if topo is not None else None
         ledger.record(kind, wire, hidden=True if ov else None,
+                      fused=True if fz else None,
                       level=ax if level is not None else None,
                       fabric=level.fabric if level is not None else None)
 
@@ -205,8 +228,10 @@ class Communicator:
         s = ledger.nbytes(x)
         max_g, n_g = max(shape), len(shape)
         pax = self._cross_axis(topo, ax)
-        _, f_in, _, ov_in = self._choice("all_reduce", s, max_g, topo, ax)
-        _, f_x, _, ov_x = self._choice("all_reduce", s, n_g, topo, pax)
+        _, f_in, _, ov_in, _ = self._choice("all_reduce", s, max_g,
+                                            topo, ax)
+        _, f_x, _, ov_x, _ = self._choice("all_reduce", s, n_g, topo,
+                                          pax)
         # within-group masked ring reads every peer's buffer (faithful
         # schedule): s*(g-1) on this level's fabric; the sub-root
         # exchange and fan-out ride the parent fabric / group rings.
@@ -223,11 +248,12 @@ class Communicator:
         s = ledger.nbytes(x)
         max_g, n_g, n = max(shape), len(shape), sum(shape)
         pax = self._cross_axis(topo, ax)
-        _, f_in, _, ov_in = self._choice("all_gather", s, max_g, topo, ax)
-        _, f_x, _, ov_x = self._choice("all_gather", s * max_g, n_g,
-                                       topo, pax)
-        self._rec("all_gather", s * (max_g - 1), ov_in, topo, ax)
-        self._rec("all_gather", s * n * (n_g - 1), ov_x, topo, pax)
+        _, f_in, _, ov_in, fz = self._choice("all_gather", s, max_g,
+                                             topo, ax)
+        _, f_x, _, ov_x, _ = self._choice("all_gather", s * max_g, n_g,
+                                          topo, pax)
+        self._rec("all_gather", s * (max_g - 1), ov_in, topo, ax, fz)
+        self._rec("all_gather", s * n * (n_g - 1), ov_x, topo, pax, fz)
         self._rec("broadcast", float(s * n), ov_in, topo, ax)
         return mc.ragged_all_gather(x, ax, shape, n_chunks=f_in,
                                     cross_chunks=f_x)
@@ -238,13 +264,37 @@ class Communicator:
         s = ledger.nbytes(x)
         max_g, n_g, n = max(shape), len(shape), sum(shape)
         pax = self._cross_axis(topo, ax)
-        _, f_in, _, ov_in = self._choice("gather", s, max_g, topo, ax)
-        _, f_x, _, ov_x = self._choice("gather", s * max_g, n_g, topo,
-                                       pax)
+        _, f_in, _, ov_in, _ = self._choice("gather", s, max_g, topo,
+                                            ax)
+        _, f_x, _, ov_x, _ = self._choice("gather", s * max_g, n_g,
+                                          topo, pax)
         self._rec("gather", s * (max_g - 1), ov_in, topo, ax)
         self._rec("gather", s * n * (n_g - 1), ov_x, topo, pax)
         return mc.ragged_gather(x, ax, shape, root=root, n_chunks=f_in,
                                 cross_chunks=f_x)
+
+    def _rs_ragged(self, x: jnp.ndarray, ax: str,
+                   topo: topo_mod.Topology, level) -> jnp.ndarray:
+        shape = level.shape
+        s = ledger.nbytes(x)
+        max_g, n_g = max(shape), len(shape)
+        pax = self._cross_axis(topo, ax)
+        _, f_in, _, ov_in, fz = self._choice("reduce_scatter", s, max_g,
+                                             topo, ax)
+        _, f_x, _, ov_x, _ = self._choice("reduce_scatter", s, n_g,
+                                          topo, pax)
+        # hierarchical padding-free RS: within-group masked rings sum the
+        # full partial buffer on this level's fabric (s*(max_g-1)), the
+        # sub-root exchange completes every segment across groups on the
+        # parent fabric (s*(n_g-1)), and the fan-out + traced-offset
+        # slice rides the group rings again (s).  No rank ever pads to a
+        # power-of-two group or falls back to the flat schedule.
+        self._rec("reduce_scatter", s * (max_g - 1), ov_in, topo, ax,
+                  fz)
+        self._rec("reduce_scatter", s * (n_g - 1), ov_x, topo, pax, fz)
+        self._rec("broadcast", float(s), ov_in, topo, ax)
+        return mc.ragged_reduce_scatter(x, ax, shape, n_chunks=f_in,
+                                        cross_chunks=f_x)
 
     def _ar_axis(self, x: jnp.ndarray, ax: str,
                  topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
@@ -252,6 +302,13 @@ class Communicator:
         if lv is not None:
             return self._ar_ragged(x, ax, topo, lv)
         return self._ar_level(x, ax, topo)
+
+    def _rs_axis(self, x: jnp.ndarray, ax: str,
+                 topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
+        lv = self._grouped_level(topo, ax)
+        if lv is not None:
+            return self._rs_ragged(x, ax, topo, lv)
+        return self._rs_level(x, ax, topo)
 
     def _ag_axis(self, x: jnp.ndarray, ax: str,
                  topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
@@ -266,8 +323,8 @@ class Communicator:
                   topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
         n = lax.axis_size(ax)
         s = ledger.nbytes(x)
-        backend, factor, mode, ov = self._choice("all_reduce", s, n,
-                                                 topo, ax)
+        backend, factor, mode, ov, _ = self._choice("all_reduce", s, n,
+                                                    topo, ax)
         wire = s * (n - 1) if mode == "faithful" and backend == "cxl" \
             else 2 * s * (n - 1) / n
         self._rec("all_reduce", wire, ov, topo, ax)
@@ -279,9 +336,9 @@ class Communicator:
                   topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
         n = lax.axis_size(ax)
         s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("reduce_scatter", s, n,
-                                              topo, ax)
-        self._rec("reduce_scatter", s * (n - 1) / n, ov, topo, ax)
+        backend, factor, _, ov, fz = self._choice("reduce_scatter", s,
+                                                  n, topo, ax)
+        self._rec("reduce_scatter", s * (n - 1) / n, ov, topo, ax, fz)
         if backend == "ring":
             return lax.psum_scatter(x, ax, scatter_dimension=0,
                                     tiled=True)
@@ -291,9 +348,9 @@ class Communicator:
                   topo: Optional[topo_mod.Topology]) -> jnp.ndarray:
         n = lax.axis_size(ax)
         s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("all_gather", s, n,
-                                              topo, ax)
-        self._rec("all_gather", s * (n - 1), ov, topo, ax)
+        backend, factor, _, ov, fz = self._choice("all_gather", s, n,
+                                                  topo, ax)
+        self._rec("all_gather", s * (n - 1), ov, topo, ax, fz)
         if backend == "ring":
             return lax.all_gather(x, ax, tiled=True)
         return mc.all_gather(x, ax, n_chunks=factor)
@@ -303,8 +360,13 @@ class Communicator:
         n = lax.axis_size(ax)
         if n == 1:
             return x
+        lv = self._grouped_level(topo, ax)
+        if lv is not None:
+            ledger.record_fallback("broadcast", level=ax,
+                                   fabric=lv.fabric)
         s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("broadcast", s, n, topo, ax)
+        backend, factor, _, ov, _ = self._choice("broadcast", s, n,
+                                                 topo, ax)
         self._rec("broadcast", float(s), ov, topo, ax)
         if backend == "ring":
             idx = lax.axis_index(ax)
@@ -317,8 +379,13 @@ class Communicator:
         n = lax.axis_size(ax)
         if n == 1:
             return x
+        lv = self._grouped_level(topo, ax)
+        if lv is not None:
+            ledger.record_fallback("reduce", level=ax,
+                                   fabric=lv.fabric)
         s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("reduce", s, n, topo, ax)
+        backend, factor, _, ov, _ = self._choice("reduce", s, n, topo,
+                                                 ax)
         self._rec("reduce", 2 * s * (n - 1) / n, ov, topo, ax)
         if backend == "ring":
             idx = lax.axis_index(ax)
@@ -331,8 +398,15 @@ class Communicator:
         n = lax.axis_size(ax)
         if n == 1:
             return x
+        lv = self._grouped_level(topo, ax)
+        if lv is not None:
+            # only reachable as the outer level of a tuple-axis gather;
+            # the single-axis path dispatches to _gather_ragged
+            ledger.record_fallback("gather", level=ax,
+                                   fabric=lv.fabric)
         s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("gather", s, n, topo, ax)
+        backend, factor, _, ov, _ = self._choice("gather", s, n, topo,
+                                                 ax)
         self._rec("gather", s * (n - 1), ov, topo, ax)
         if backend == "ring":
             idx = lax.axis_index(ax)
@@ -345,8 +419,13 @@ class Communicator:
         n = lax.axis_size(ax)
         if n == 1:
             return x
+        lv = self._grouped_level(topo, ax)
+        if lv is not None:
+            ledger.record_fallback("scatter", level=ax,
+                                   fabric=lv.fabric)
         s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("scatter", s, n, topo, ax)
+        backend, factor, _, ov, _ = self._choice("scatter", s, n, topo,
+                                                 ax)
         # root pushes every segment but its own: s*(n-1)/n wire bytes
         self._rec("scatter", s * (n - 1) / n, ov, topo, ax)
         if backend == "ring":
@@ -381,7 +460,7 @@ class Communicator:
         # the outermost on the shard, AG back out
         return mc.hierarchical_all_reduce(
             x, axes,
-            rs_fn=lambda z, ax: self._rs_level(z, ax, topo),
+            rs_fn=lambda z, ax: self._rs_axis(z, ax, topo),
             ar_fn=lambda z, ax: self._ar_axis(z, ax, topo),
             ag_fn=lambda z, ax: self._ag_axis(z, ax, topo))
 
@@ -408,7 +487,7 @@ class Communicator:
         topo = self._topo()
         out = x
         for ax in axes:  # outer axis first: inverse of gather
-            out = self._rs_level(out, ax, topo)
+            out = self._rs_axis(out, ax, topo)
         return out
 
     def all_to_all(self, x: jnp.ndarray, axis: AxisSpec) -> jnp.ndarray:
@@ -417,10 +496,14 @@ class Communicator:
             raise NotImplementedError("all_to_all is single-axis")
         ax = axes[0]
         topo = self._topo()
+        lv = self._grouped_level(topo, ax)
+        if lv is not None:
+            ledger.record_fallback("all_to_all", level=ax,
+                                   fabric=lv.fabric)
         n_ = lax.axis_size(ax)
         s = ledger.nbytes(x)
-        backend, factor, _, ov = self._choice("all_to_all", s, n_,
-                                              topo, ax)
+        backend, factor, _, ov, _ = self._choice("all_to_all", s, n_,
+                                                 topo, ax)
         self._rec("all_to_all", s * (n_ - 1) / n_, ov, topo, ax)
         if backend == "ring":
             n = n_

@@ -21,6 +21,13 @@ Overlap accounting: collectives issued inside a ``ledger.hidden()``
 region (the double-buffered FSDP prefetch, or an ``auto`` plan cell
 tuned as overlapped) book their bytes as *hidden* - expected to be
 scheduled behind compute - while everything else books as *exposed*.
+Orthogonally, a ``ledger.fused()`` region marks collectives whose
+epilogue/prologue compute runs inside a fused kernel
+(``kernels.fused_collectives``); those bytes additionally book into a
+*fused* split so the hidden-vs-exposed totals can be decomposed by
+fusion coverage.  Primitives that degrade to a hierarchy-blind flat
+schedule on a ragged axis book an explicit ``record_fallback`` event -
+degradations are audited, never silent.
 ``counts`` is the number of distinct collective call *sites*;
 ``collective_calls`` additionally multiplies by the ambient scale, i.e.
 the true number of collectives launched per step.
@@ -49,6 +56,7 @@ from collections import defaultdict
 _BYTES: dict = defaultdict(float)
 _EXPOSED: dict = defaultdict(float)
 _HIDDEN: dict = defaultdict(float)
+_FUSED: dict = defaultdict(float)   # bytes whose epilogue/prologue fused
 _COUNTS: dict = defaultdict(int)
 _CALLS: dict = defaultdict(float)   # trip-count-scaled launch count
 # Per-(level axis, fabric) wire bytes: "<axis>/<fabric>" -> kind -> bytes.
@@ -57,7 +65,9 @@ _CALLS: dict = defaultdict(float)   # trip-count-scaled launch count
 _LEVEL_BYTES: dict = defaultdict(lambda: defaultdict(float))
 _MULT: list = [1.0]
 _HIDDEN_CTX: list = [False]
+_FUSED_CTX: list = [False]
 _CHOICES: list = []   # autotuner decisions, for benchmark audit
+_FALLBACKS: list = []  # explicit flat-on-ragged degradation events
 _TIMINGS: list = []   # measured wall-time samples (online re-tuning)
 # Observers called once per timing sample (repro.obs flight recorder).
 # Deliberately NOT cleared by reset(): hooks are a process-lifetime
@@ -69,12 +79,15 @@ def reset() -> None:
     _BYTES.clear()
     _EXPOSED.clear()
     _HIDDEN.clear()
+    _FUSED.clear()
     _COUNTS.clear()
     _CALLS.clear()
     _LEVEL_BYTES.clear()
     _MULT[:] = [1.0]
     _HIDDEN_CTX[:] = [False]
+    _FUSED_CTX[:] = [False]
     _CHOICES.clear()
+    _FALLBACKS.clear()
     _TIMINGS.clear()
 
 
@@ -102,25 +115,64 @@ def in_hidden_region() -> bool:
     return _HIDDEN_CTX[-1]
 
 
+@contextlib.contextmanager
+def fused(flag: bool = True):
+    """Collectives recorded inside feed a fused collective+compute
+    kernel (``kernels.fused_collectives``): their epilogue/prologue
+    compute rides the transfer instead of a separate HBM round-trip.
+    The bytes additionally book into the fused split (orthogonal to
+    hidden/exposed) so dry-runs can report how much of the wire
+    traffic fusion covered."""
+    _FUSED_CTX.append(flag)
+    try:
+        yield
+    finally:
+        _FUSED_CTX.pop()
+
+
+def in_fused_region() -> bool:
+    return _FUSED_CTX[-1]
+
+
 def record(kind: str, wire_bytes: float, *,
-           hidden: "bool | None" = None, level: "str | None" = None,
+           hidden: "bool | None" = None, fused: "bool | None" = None,
+           level: "str | None" = None,
            fabric: "str | None" = None) -> None:
-    """``hidden=None`` defers to the ambient ``ledger.hidden()`` region.
+    """``hidden=None`` defers to the ambient ``ledger.hidden()`` region;
+    ``fused=None`` likewise defers to ``ledger.fused()``.
     ``level``/``fabric`` attribute the bytes to a topology level (the
     mesh axis name and the fabric kind that carries the traffic)."""
     h = _HIDDEN_CTX[-1] if hidden is None else hidden
+    fz = _FUSED_CTX[-1] if fused is None else fused
     m = _MULT[-1]
     _BYTES[kind] += wire_bytes * m
     (_HIDDEN if h else _EXPOSED)[kind] += wire_bytes * m
+    if fz:
+        _FUSED[kind] += wire_bytes * m
     _COUNTS[kind] += 1
     _CALLS[kind] += m
     if level is not None:
         _LEVEL_BYTES[f"{level}/{fabric or '?'}"][kind] += wire_bytes * m
 
 
+def record_fallback(primitive: str, *, level: "str | None" = None,
+                    fabric: "str | None" = None,
+                    reason: str = "flat_on_ragged") -> None:
+    """Audit one explicit degradation event: a primitive that ran a
+    hierarchy-blind (flat single-axis) schedule on an axis that
+    declares ragged groups.  ReduceScatter/AllReduce/AllGather/Gather
+    have grouped schedules and never book one of these; the remaining
+    primitives do, so a dry-run (or test) can assert exactly which
+    calls degraded instead of discovering it from byte totals."""
+    _FALLBACKS.append({"primitive": primitive, "level": level,
+                       "fabric": fabric, "reason": reason,
+                       "calls": float(_MULT[-1])})
+
+
 def record_choice(primitive: str, msg_bytes: int, nranks: int,
                   backend: str, slicing_factor: int, mode: str,
-                  overlap: bool = False, level: "str | None" = None,
+                  overlap: bool = False, fused: bool = False,
+                  level: "str | None" = None,
                   fabric: "str | None" = None,
                   predicted_time: float = 0.0,
                   baseline_time: float = 0.0,
@@ -137,6 +189,7 @@ def record_choice(primitive: str, msg_bytes: int, nranks: int,
                      "nranks": int(nranks), "backend": backend,
                      "slicing_factor": int(slicing_factor),
                      "allreduce_mode": mode, "overlap": bool(overlap),
+                     "fused": bool(fused),
                      "level": level, "fabric": fabric,
                      "predicted_time": float(predicted_time),
                      "baseline_time": float(baseline_time),
@@ -249,13 +302,16 @@ def snapshot() -> dict:
             "total_wire_bytes": float(sum(_BYTES.values())),
             "exposed_bytes": dict(_EXPOSED),
             "hidden_bytes": dict(_HIDDEN),
+            "fused_bytes": dict(_FUSED),
             "total_exposed_bytes": float(sum(_EXPOSED.values())),
             "total_hidden_bytes": float(sum(_HIDDEN.values())),
+            "total_fused_bytes": float(sum(_FUSED.values())),
             "collective_calls": dict(_CALLS),
             "total_collective_calls": float(sum(_CALLS.values())),
             "level_wire_bytes": {k: dict(v)
                                  for k, v in _LEVEL_BYTES.items()},
             "auto_choices": list(_CHOICES),
+            "fallbacks": list(_FALLBACKS),
             "timings": list(_TIMINGS),
             "timing_cells": timing_cells()}
 

@@ -276,6 +276,44 @@ def ragged_all_gather(x: jnp.ndarray, axis_name: str, group_shape,
     return grouped_broadcast(buf, axis_name, shape, n_chunks=n_chunks)
 
 
+def ragged_reduce_scatter(x: jnp.ndarray, axis_name: str, group_shape,
+                          n_chunks: int = DEFAULT_CHUNKS,
+                          cross_chunks: "int | None" = None
+                          ) -> jnp.ndarray:
+    """Padding-free hierarchical reduce-scatter over ragged groups:
+    rank r returns ``sum_ranks(x)[r*seg:(r+1)*seg]`` with
+    ``seg = lead / sum(shape)`` - exactly the flat single-axis
+    ``reduce_scatter`` semantics, decomposed so the cross-group hop
+    rides the parent level's fabric.
+
+    Phase 1 reduces within each group (masked rings to
+    ``max(shape) - 1`` rounds, so no padding ranks appear); phase 2
+    exchanges the group partials across the per-group sub-roots - the
+    disjoint-offset complement of ``ragged_all_gather``'s assembly:
+    each sub-root's buffer carries its group's partial of *every*
+    global segment, and summing them completes every segment at once;
+    phase 3 fans the completed buffer back out within each group and
+    every rank slices its own rank-major segment (a traced offset -
+    uniform shapes, so SPMD never sees an uneven shard).
+    ``cross_chunks`` tunes the sub-root hop's slicing factor
+    separately; defaults to ``n_chunks``.
+    """
+    n = _check_axis(axis_name, group_shape)
+    shape = tuple(int(g) for g in group_shape)
+    if n == 1:
+        return x
+    if x.shape[0] % n:
+        raise ValueError(f"leading dim {x.shape[0]} must divide axis {n}")
+    seg = x.shape[0] // n
+    idx = lax.axis_index(axis_name)
+    part = grouped_all_reduce(x, axis_name, shape, n_chunks=n_chunks)
+    full = subroot_all_reduce(part, axis_name, shape,
+                              n_chunks=cross_chunks if cross_chunks
+                              is not None else n_chunks)
+    full = grouped_broadcast(full, axis_name, shape, n_chunks=n_chunks)
+    return lax.dynamic_slice_in_dim(full, idx * seg, seg, axis=0)
+
+
 def ragged_gather(x: jnp.ndarray, axis_name: str, group_shape,
                   root: int = 0,
                   n_chunks: int = DEFAULT_CHUNKS,

@@ -41,10 +41,48 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import ledger
+
 MiB = 1024 ** 2
 
 # NCCL's default fused-gradient-buffer cap is 25 MB; same default here.
 DEFAULT_BUCKET_BYTES = 25 * MiB
+
+
+@jax.tree_util.register_pytree_node_class
+class StackedShards:
+    """A gathered FSDP weight kept in rank-major stacked form (n, Ks, N)
+    instead of concatenated (n*Ks, N).
+
+    The fused-gather path (``make_gather_fn(..., fuse=True)``) returns
+    matmul weights this way so the consuming layer can stream the shard
+    stack straight through ``kernels.ops.fused_dense`` - the all_gather
+    fused into the matmul's prologue - without ever materializing the
+    concatenated weight.  ``models.layers.dense`` dispatches on this
+    type; everything else treats it as an opaque pytree node (one array
+    child, so grads/optimizer state never see it - it only exists
+    inside the per-row gathered params)."""
+
+    def __init__(self, shards):
+        self.shards = shards
+
+    def tree_flatten(self):
+        return (self.shards,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    def __repr__(self):
+        shp = getattr(self.shards, "shape", None)
+        return f"StackedShards(shape={shp})"
+
+
+# Matmul weights the fused all_gather+matmul kernel may consume: 2-D,
+# dp-sharded on dim 0 (the contraction dim of the ``x @ w`` that eats
+# them).  Everything else (norm scales, embeddings, biases) gathers on
+# the ordinary concatenated path.
+FUSABLE_PARAMS = frozenset({"wq", "wk", "wv", "wo", "wg", "wu", "wd"})
 
 
 # --------------------------------------------------------------------- #
@@ -214,8 +252,20 @@ def bucketed_sync_grads(grads: Any, specs: Any, pc, dp_axis,
 # bucketed FSDP gather (fused AllGather; AD transposes to fused RS)
 # --------------------------------------------------------------------- #
 
+def _leaf_names(tree: Any) -> list:
+    """The last path component (dict key name) of every leaf, in the
+    same order ``jax.tree.flatten`` yields them."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names = []
+    for path, _leaf in flat:
+        last = path[-1] if path else None
+        names.append(getattr(last, "key", None))
+    return names
+
+
 def make_gather_fn(all_row_specs: dict, pc, dp_axis,
-                   bucket_bytes: Optional[int] = None):
+                   bucket_bytes: Optional[int] = None,
+                   fuse: bool = False):
     """Returns ``gather(group_key, row_params) -> gathered params``.
 
     Every leaf whose spec shards a dim over the dp axis is moved to
@@ -230,10 +280,21 @@ def make_gather_fn(all_row_specs: dict, pc, dp_axis,
     leaves into one buffer (torch-FSDP's per-module FlatParameter);
     a positive cap splits NCCL-style, and ``<= 0`` reproduces the
     per-leaf schedule through the same code path.
+
+    ``fuse=True`` routes the 2-D matmul weights (``FUSABLE_PARAMS``,
+    dp-sharded on their contraction dim) through the fused
+    all_gather+matmul path: they bucket separately, gather inside a
+    ``ledger.fused()`` region (booking their wire bytes into the fused
+    split), and come back as :class:`StackedShards` - the rank-major
+    (n, Ks, N) stack ``models.layers.dense`` streams through
+    ``kernels.ops.fused_dense`` instead of a concatenated array.  The
+    slicing back to per-leaf stacks is static reshapes only, so the AD
+    transpose is the identical fused ReduceScatter.
     """
     def gather(group_key: str, row_params):
         specs = all_row_specs[group_key]
         leaves, spec_leaves, treedef = _flat_with_specs(row_params, specs)
+        names = _leaf_names(row_params) if fuse else [None] * len(leaves)
 
         n_total = 1
         for ax in _axes_tuple(dp_axis):
@@ -242,6 +303,7 @@ def make_gather_fn(all_row_specs: dict, pc, dp_axis,
         moved: dict = {}
         dims: dict = {}
         entries = []
+        fused_ix = set()
         for i, (x, spec) in enumerate(zip(leaves, spec_leaves)):
             dim = _axis_dim(spec, dp_axis)
             if dim is None:
@@ -249,17 +311,29 @@ def make_gather_fn(all_row_specs: dict, pc, dp_axis,
             m = jnp.moveaxis(x, dim, 0)
             moved[i] = m
             dims[i] = dim
-            entries.append((i, m.shape, m.dtype, ()))
+            fusable = (fuse and names[i] in FUSABLE_PARAMS
+                       and dim == 0 and m.ndim == 2)
+            if fusable:
+                fused_ix.add(i)
+            entries.append((i, m.shape, m.dtype,
+                            ("fused",) if fusable else ()))
 
         out = list(leaves)
         src = [moved.get(i, x) for i, x in enumerate(leaves)]
         for bucket in assign_buckets(entries, bucket_bytes):
+            is_fused = bucket.key[0] == ("fused",)
             flat = pack(bucket, src)
-            full = pc.comm.all_gather(flat, dp_axis)
+            with ledger.fused(is_fused):
+                full = pc.comm.all_gather(flat, dp_axis)
             blocks = full.reshape(n_total, bucket.elems)
             for s in bucket.slots:
                 seg = blocks[:, s.offset:s.offset + s.size]
                 m = seg.reshape((n_total,) + s.shape)
+                if s.index in fused_ix:
+                    # keep the rank-major shard stack: the consuming
+                    # matmul streams it without concatenation
+                    out[s.index] = StackedShards(m)
+                    continue
                 m = m.reshape((n_total * s.shape[0],) + s.shape[1:])
                 out[s.index] = jnp.moveaxis(m, 0, dims[s.index])
         return treedef.unflatten(out)

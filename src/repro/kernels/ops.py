@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels import chunked_reduce as _cr
 from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_collectives as _fc
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssm_scan as _ss
 
@@ -45,3 +46,35 @@ def rms_norm(x, scale, eps: float = 1e-5, rows: int = _rn.ROW_TILE,
     interpret = _default_interpret() if interpret is None else interpret
     return _rn.rms_norm(x, scale, eps=eps, rows=rows,
                         interpret=interpret)
+
+
+def reduce_scatter_rmsnorm(shards, scale, eps: float = 1e-5,
+                           rows: int = _fc.ROW_TILE, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fc.reduce_scatter_rmsnorm(shards, scale, eps=eps, rows=rows,
+                                      interpret=interpret)
+
+
+def reduce_scatter_adamw(shards, p, m, v, lr, bc1, bc2,
+                         b1: float = 0.9, b2: float = 0.95,
+                         eps: float = 1e-8, weight_decay: float = 0.0,
+                         tile: int = _fc.SEG_TILE, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fc.reduce_scatter_adamw(shards, p, m, v, lr, bc1, bc2,
+                                    b1=b1, b2=b2, eps=eps,
+                                    weight_decay=weight_decay,
+                                    tile=tile, interpret=interpret)
+
+
+def all_gather_matmul(x, w_shards, rows: int = _fc.ROW_TILE,
+                      interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fc.all_gather_matmul(x, w_shards, rows=rows,
+                                 interpret=interpret)
+
+
+def fused_dense(x, w_shards, interpret=None):
+    """Differentiable fused AllGather-consuming matmul (the FSDP path's
+    gather+matmul replacement; see ``fused_collectives.fused_dense``)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fc.fused_dense(x, w_shards, interpret)

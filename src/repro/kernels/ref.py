@@ -60,3 +60,42 @@ def rms_norm_ref(x, scale, eps: float = 1e-5):
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
     return ((x32 * jax.lax.rsqrt(var + eps))
             * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- fused collective+compute oracles (kernels.fused_collectives) --------- #
+# Each is the unfused two-step composition the fused kernel replaces:
+# sum the peers' partials (f32, the reduce_scatter consumer side), then
+# run the epilogue / consuming matmul as a separate pass.
+
+def reduce_scatter_rmsnorm_ref(shards, scale, eps: float = 1e-5):
+    """(n_src, T, D) peer partials -> (T, D) rmsnorm of the f32 sum."""
+    acc = jnp.sum(shards.astype(jnp.float32), axis=0)
+    var = jnp.mean(jnp.square(acc), axis=-1, keepdims=True)
+    return ((acc * jax.lax.rsqrt(var + eps))
+            * scale.astype(jnp.float32)).astype(shards.dtype)
+
+
+def reduce_scatter_adamw_ref(shards, p, m, v, lr, bc1, bc2,
+                             b1: float = 0.9, b2: float = 0.95,
+                             eps: float = 1e-8,
+                             weight_decay: float = 0.0):
+    """(n_src, L) grad partials + (L,) param/moments -> (p', m', v');
+    the ``optim.adamw_update`` math applied to the summed gradient."""
+    g = jnp.sum(shards.astype(jnp.float32), axis=0)
+    lr32 = jnp.float32(lr)
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * jnp.square(g)
+    delta = (m / jnp.float32(bc1)) / (jnp.sqrt(v / jnp.float32(bc2))
+                                      + eps)
+    p32 = p.astype(jnp.float32)
+    if weight_decay:
+        delta = delta + weight_decay * p32
+    return (p32 - lr32 * delta).astype(p.dtype), m, v
+
+
+def all_gather_matmul_ref(x, w_shards):
+    """(T, n*Ks) @ concat((n, Ks, N) shards) with f32 accumulation."""
+    n, ks, nout = w_shards.shape
+    w = w_shards.reshape(n * ks, nout)
+    return jnp.dot(x, w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)

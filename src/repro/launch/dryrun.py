@@ -5,6 +5,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 if os.environ.get("REPRO_DRYRUN_DEVICES"):
     os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
                                + os.environ["REPRO_DRYRUN_DEVICES"])
+# --xla-overlap merges the overlap preset into the flags just set; it
+# shares the same must-precede-jax constraint, hence the odd placement.
+from repro.launch import xla
+xla.apply_overlap_preset()
 
 """Multi-pod dry-run driver.
 
@@ -493,6 +497,7 @@ def main() -> None:
                          "sample per line tagged with the run id) "
                          "plus a Prometheus rendering of the last "
                          "run's registry at <base>.prom")
+    xla.add_argument(ap)
     args = ap.parse_args()
 
     if args.topology:

@@ -9,6 +9,9 @@ from __future__ import annotations
 import argparse
 import time
 
+from repro.launch import xla
+xla.apply_overlap_preset()   # --xla-overlap: must precede the jax import
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -69,6 +72,7 @@ def main() -> None:
                          "metric registry as JSON-lines here (and a "
                          "Prometheus rendering to <base>.prom); see "
                          "repro.obs")
+    xla.add_argument(ap)
     args = ap.parse_args()
     if args.online_retune and not args.plan:
         ap.error("--online-retune requires --plan")

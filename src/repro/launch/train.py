@@ -46,6 +46,9 @@ import argparse
 import contextlib
 import time
 
+from repro.launch import xla
+xla.apply_overlap_preset()   # --xla-overlap: must precede the jax import
+
 import jax
 import jax.numpy as jnp
 
@@ -100,6 +103,11 @@ def main() -> None:
     ap.add_argument("--prefetch", type=int, default=1, choices=[0, 1],
                     help="FSDP AllGather prefetch depth "
                          "(0 = serialized gather-then-compute)")
+    ap.add_argument("--fuse-kernels", action="store_true",
+                    help="fuse the FSDP AllGather into the consuming "
+                         "matmuls (kernels.fused_collectives); needs "
+                         "the bucketed gather path (--bucket-mb > 0)")
+    xla.add_argument(ap)
     ap.add_argument("--mesh", default=None,
                     help="DPxTP, e.g. 2x4; default: production mesh")
     ap.add_argument("--multi-pod", action="store_true")
@@ -215,7 +223,8 @@ def main() -> None:
                        # plan already activated process-wide above;
                        # backend='auto' resolves it via the registry
                        plan_path=None, bucket_mb=args.bucket_mb,
-                       prefetch=args.prefetch)
+                       prefetch=args.prefetch,
+                       fuse_kernels=args.fuse_kernels)
     from repro.core import ledger
     ledger.reset()
     step, pspecs, bspecs, pc = make_sharded_train_step(

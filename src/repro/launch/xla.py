@@ -1,0 +1,113 @@
+"""XLA flag presets applied before the first jax import.
+
+``--xla-overlap`` on the launchers (train / serve / dryrun) folds the
+standard comm/compute-overlap compiler flags - async collectives, the
+latency-hiding scheduler, the high-priority async stream, plus the
+Triton fusion knobs - into ``XLA_FLAGS``.  XLA reads the variable once
+at backend init, so the launchers call ``apply_overlap_preset`` from a
+module-top hook that runs *before* their ``import jax``; this module
+must therefore never import jax itself.
+
+Merge semantics: flags the user already pinned in an external
+``XLA_FLAGS`` env var win over the preset (with a warning naming each
+conflict), so an operator's explicit tuning is never silently
+overridden; preset flags absent from the env var are appended.  The
+preset only applies when a CUDA jaxlib is importable: XLA's env-var
+flag parser *aborts the process* on flags the build does not know, so
+on the CPU-only container the launcher accepts ``--xla-overlap`` (same
+flag surface as a real cluster) but skips the merge with a warning.
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+import warnings
+
+# The standard overlap preset for GPU clusters: async collectives +
+# latency-hiding scheduler move every collective the scheduler can
+# prove independent onto the (highest-priority) async stream, and the
+# Triton knobs keep the fused epilogues of kernels.fused_collectives
+# from being broken back apart by the fallback GEMM emitter.
+OVERLAP_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true",
+    "--xla_gpu_triton_gemm_any=True",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+FLAG_NAME = "--xla-overlap"
+
+
+def _flag_key(flag: str) -> str:
+    return flag.split("=", 1)[0]
+
+
+def _gpu_jaxlib() -> bool:
+    """Whether a CUDA jaxlib/plugin is importable - the only builds
+    whose flag parser knows the ``--xla_gpu_*`` options.  Checked
+    without importing jax (which would lock XLA_FLAGS)."""
+    for mod in ("jax_cuda12_plugin", "jax_cuda13_plugin",
+                "jax_plugins.xla_cuda12", "jaxlib.cuda_extension"):
+        try:
+            if importlib.util.find_spec(mod) is not None:
+                return True
+        except (ImportError, ValueError):
+            continue
+    return False
+
+
+def apply_overlap_preset(argv=None, *, force=False) -> bool:
+    """Merge ``OVERLAP_FLAGS`` into ``os.environ['XLA_FLAGS']`` when
+    ``--xla-overlap`` is present in ``argv`` (default ``sys.argv``).
+
+    Returns True when the preset was applied.  Flags already set in the
+    env var keep their value (a warning names each conflict); jax
+    already being imported also warns, since XLA has then locked its
+    options and the merge cannot take effect this process.  Without a
+    CUDA jaxlib the merge is skipped entirely (warning): XLA aborts on
+    unknown flags, so shipping GPU options to a CPU build would kill
+    the launcher at init.  ``force=True`` bypasses that gate (tests).
+    """
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if FLAG_NAME not in argv:
+        return False
+    if not force and not _gpu_jaxlib():
+        warnings.warn(
+            f"{FLAG_NAME}: no CUDA jaxlib detected; this build's flag "
+            "parser aborts on the GPU overlap flags, so the preset is "
+            "skipped", stacklevel=2)
+        return False
+    if "jax" in sys.modules:
+        warnings.warn(
+            f"{FLAG_NAME}: jax is already imported; XLA_FLAGS changes "
+            "no longer take effect in this process", stacklevel=2)
+    existing = os.environ.get("XLA_FLAGS", "").split()
+    have = {_flag_key(f): f for f in existing}
+    merged = list(existing)
+    for flag in OVERLAP_FLAGS:
+        key = _flag_key(flag)
+        if key in have:
+            if have[key] != flag:
+                warnings.warn(
+                    f"{FLAG_NAME}: XLA_FLAGS already sets "
+                    f"{have[key]!r}; keeping it over the preset's "
+                    f"{flag!r}", stacklevel=2)
+            continue
+        merged.append(flag)
+    os.environ["XLA_FLAGS"] = " ".join(merged)
+    return True
+
+
+def add_argument(parser) -> None:
+    """Document the flag in a launcher's argparse parser.  The actual
+    effect happens in ``apply_overlap_preset`` before jax is imported -
+    argparse only supplies ``--help`` text and rejects typos."""
+    parser.add_argument(
+        FLAG_NAME, action="store_true",
+        help="fold the XLA comm/compute-overlap compiler flags (async "
+             "collectives, latency-hiding scheduler, high-priority "
+             "async stream, Triton fusions) into XLA_FLAGS before jax "
+             "initializes; flags pinned in an external XLA_FLAGS env "
+             "var win over the preset")

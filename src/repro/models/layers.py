@@ -25,10 +25,24 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.overlap import StackedShards
 from repro.models.config import ModelConfig
 from repro.models.pcontext import ParallelContext
 
 Params = dict
+
+
+def dense(x: jnp.ndarray, w) -> jnp.ndarray:
+    """``x @ w`` where ``w`` may be a rank-major ``StackedShards`` stack
+    from the fused FSDP gather path (``TrainConfig.fuse_kernels``): the
+    stack streams through the fused all_gather+matmul kernel
+    (``kernels.ops.fused_dense`` - shard k+1 prefetched while shard k
+    multiplies) instead of being concatenated first.  Plain arrays take
+    the ordinary matmul, so the unfused/serving paths are unchanged."""
+    if isinstance(w, StackedShards):
+        from repro.kernels import ops
+        return ops.fused_dense(x, w.shards)
+    return x @ w
 
 
 # ---------------------------------------------------------------------- #
@@ -193,11 +207,11 @@ def attention_forward(params: Params, x: jnp.ndarray, cfg: ModelConfig,
     """
     d = attn_dims(cfg, pc.tp)
     b, l, _ = x.shape
-    q = (x @ params["wq"]).reshape(b, l, d.n_q, d.head_dim)
+    q = dense(x, params["wq"]).reshape(b, l, d.n_q, d.head_dim)
     src = x if kv_source is None else kv_source
     lk = src.shape[1]
-    k = (src @ params["wk"]).reshape(b, lk, d.n_kv, d.head_dim)
-    v = (src @ params["wv"]).reshape(b, lk, d.n_kv, d.head_dim)
+    k = dense(src, params["wk"]).reshape(b, lk, d.n_kv, d.head_dim)
+    v = dense(src, params["wv"]).reshape(b, lk, d.n_kv, d.head_dim)
     if kv_source is None:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions[..., :lk] if positions.shape[-1] >= lk
@@ -205,7 +219,7 @@ def attention_forward(params: Params, x: jnp.ndarray, cfg: ModelConfig,
     kk, vv = select_kv(k, v, d, cfg, pc)
     out = attention_scores(q, kk, vv, causal=causal and kv_source is None,
                            window=window)
-    out = out.reshape(b, l, d.n_q * d.head_dim) @ params["wo"]
+    out = dense(out.reshape(b, l, d.n_q * d.head_dim), params["wo"])
     out = pc.tp_all_reduce(out)
     if return_kv:
         return out, (k, v)
@@ -234,14 +248,14 @@ def decode_attention(params: Params, x: jnp.ndarray, cache_k, cache_v,
     s_local = cache_k.shape[1]
     tp_idx = pc.tp_index()
 
-    q = (x @ params["wq"]).reshape(b, 1, d.n_q, d.head_dim)
+    q = dense(x, params["wq"]).reshape(b, 1, d.n_q, d.head_dim)
     q = apply_rope(q, pos[None].reshape(1,), cfg.rope_theta)
     # KV for the new token: computed on every shard (redundant but tiny),
     # using the *full* kv-head projection when kv is replicated; when kv
     # is head-sharded we gather the heads so the seq-sharded cache holds
     # all kv heads.
-    k_new = (x @ params["wk"]).reshape(b, 1, d.n_kv, d.head_dim)
-    v_new = (x @ params["wv"]).reshape(b, 1, d.n_kv, d.head_dim)
+    k_new = dense(x, params["wk"]).reshape(b, 1, d.n_kv, d.head_dim)
+    v_new = dense(x, params["wv"]).reshape(b, 1, d.n_kv, d.head_dim)
     k_new = apply_rope(k_new, pos[None].reshape(1,), cfg.rope_theta)
     if d.kv_sharded and pc.tp > 1:
         # (B,1,n_kv_local,hd) -> all heads: gather over tp along head dim
@@ -298,8 +312,9 @@ def decode_attention(params: Params, x: jnp.ndarray, cache_k, cache_v,
                                              axis=2)
     else:
         out_local = out_full
-    out = out_local.astype(x.dtype).reshape(b, 1, d.n_q * d.head_dim) \
-        @ params["wo"]
+    out = dense(out_local.astype(x.dtype).reshape(b, 1,
+                                                  d.n_q * d.head_dim),
+                params["wo"])
     out = pc.tp_all_reduce(out)
     return out, cache_k, cache_v
 
@@ -328,8 +343,8 @@ def init_ffn(key, d_model: int, d_ff_local: int, dtype) -> Params:
 
 def ffn_forward(params: Params, x: jnp.ndarray,
                 pc: ParallelContext) -> jnp.ndarray:
-    h = jax.nn.silu(x @ params["wg"]) * (x @ params["wu"])
-    out = h @ params["wd"]
+    h = jax.nn.silu(dense(x, params["wg"])) * dense(x, params["wu"])
+    out = dense(h, params["wd"])
     return pc.tp_all_reduce(out)
 
 

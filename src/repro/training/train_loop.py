@@ -46,6 +46,13 @@ class TrainConfig:
     # serialized gather-then-compute schedule).
     bucket_mb: float = 25.0
     prefetch: int = 1
+    # Fused collective+compute kernels (kernels.fused_collectives): the
+    # FSDP gathers return the matmul weights as rank-major shard stacks
+    # and the consuming matmuls stream them through the fused
+    # all_gather+matmul kernel (models.layers.dense).  Requires the
+    # bucketed gather path (bucket_mb > 0); the per-leaf reference
+    # gather ignores the flag.
+    fuse_kernels: bool = False
 
     @property
     def bucket_bytes(self) -> int:
@@ -59,10 +66,13 @@ def make_gather_fn(tcfg: TrainConfig, rspecs: dict, pc: ParallelContext,
     a row is one FlatParameter regardless of ``bucket_mb``, which only
     caps the grad-sync buffers) or the per-leaf reference when
     ``bucket_mb <= 0``.  Shared by the trainer and the dry-run so the
-    two always lower the same schedule."""
+    two always lower the same schedule.  ``tcfg.fuse_kernels`` rides
+    through to the bucketed path: matmul weights come back as shard
+    stacks for the fused all_gather+matmul kernel."""
     if tcfg.bucket_bytes > 0:
         return overlap.make_gather_fn(rspecs, pc, dp_axis,
-                                      bucket_bytes=None)
+                                      bucket_bytes=None,
+                                      fuse=tcfg.fuse_kernels)
     return sharding.fsdp_gather_fn(rspecs, pc, dp_axis)
 
 

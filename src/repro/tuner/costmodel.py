@@ -129,6 +129,36 @@ def roofline_compute_time(flops: float, hbm_bytes: float = 0.0, *,
     return max(flops / peak_flops, hbm_bytes / hbm_bw)
 
 
+def epilogue_flops(primitive: str, msg_bytes: int) -> float:
+    """FLOPs of the epilogue/prologue compute a fused collective kernel
+    folds into the transfer (``kernels.fused_collectives``), per
+    message byte: ~2 flops per f32 element covers both shipped fusions
+    (rmsnorm: square + multiply-add per element; AdamW: a handful of
+    FMAs per element - same order).  A primitive with no fused kernel
+    contributes nothing."""
+    if primitive not in ("reduce_scatter", "all_gather"):
+        return 0.0
+    return 2.0 * (max(0, int(msg_bytes)) / 4.0)
+
+
+def fused_window(primitive: str, msg_bytes: int, base_window: float, *,
+                 peak_flops: float = TPU_V5E.peak_flops_bf16,
+                 hbm_bw: float = TPU_V5E.hbm_bw) -> float:
+    """The overlap window of a *fused* candidate: the unfused window
+    plus the roofline residency of the epilogue the fusion absorbs into
+    the transfer.  Fusing also deletes the epilogue's HBM round-trip on
+    the collective's payload (the unfused composition writes the
+    reduced segment and reads it straight back: 2x msg_bytes), so that
+    traffic counts toward the hidden window too.  Returns
+    ``base_window`` unchanged for primitives with no fused kernel."""
+    fl = epilogue_flops(primitive, msg_bytes)
+    if fl <= 0.0:
+        return max(0.0, base_window)
+    extra = roofline_compute_time(fl, 2.0 * max(0, int(msg_bytes)),
+                                  peak_flops=peak_flops, hbm_bw=hbm_bw)
+    return max(0.0, base_window) + extra
+
+
 def predict_exposed_time(backend: str, primitive: str, nranks: int,
                          msg_bytes: int, *,
                          overlappable_compute: float = 0.0,

@@ -531,8 +531,15 @@ class OnlineTuner:
             best_cost = None
             best_st = None
             priced = {}
-            for backend, factor, mode in _candidates(
-                    key[0], self.grid, backends):
+            for cand in _candidates(key[0], self.grid, backends):
+                if len(cand) > 3 and cand[3]:
+                    # fused variants have no measured channel (the
+                    # ledger times the collective, not the fused
+                    # kernel), so the online refresh compares the
+                    # transport candidates only and carries the
+                    # offline fusion verdict through unchanged below
+                    continue
+                backend, factor, mode = cand[:3]
                 t, st = self.cost(key, backend, factor, mode)
                 priced[(backend, factor, mode)] = (t, st)
                 if best_cost is None or t < best_cost:
@@ -557,10 +564,17 @@ class OnlineTuner:
                             base_ch.allreduce_mode)
             wire = self._oracle_time(key, *best) \
                 * self.cal_scale(best[0], lkey, key[0])
+            # a surviving fused verdict keeps the sweep's objective: its
+            # window folds in the epilogue roofline, so repricing under
+            # the bare constant window would drift predicted_time on
+            # every refresh even when nothing changed
+            win = costmodel.fused_window(key[0], 1 << key[1],
+                                         self.overlap_window) \
+                if (same and base_ch.fused) else self.overlap_window
             out.entries[key] = Choice(
                 backend=best[0], slicing_factor=best[1],
                 allreduce_mode=best[2],
-                predicted_time=max(0.0, wire - self.overlap_window),
+                predicted_time=max(0.0, wire - win),
                 baseline_time=base_ch.baseline_time,
                 overlap=(base_ch.overlap if same
                          else self.overlap_window > 0.0),
@@ -570,7 +584,11 @@ class OnlineTuner:
                              if best_st is not None else 0.0),
                 sample_count=(int(round(best_st.samples))
                               if best_st is not None else 0),
-                ewma_alpha=self.alpha if best_st is not None else 0.0)
+                ewma_alpha=self.alpha if best_st is not None else 0.0,
+                # the offline fusion verdict survives a refresh as long
+                # as the transport choice does; a flipped cell reverts
+                # to unfused until the next offline sweep re-prices it
+                fused=(base_ch.fused if same else False))
         if len(self.explored) > explored_before:
             meta["online"]["explored_cells"] = (len(self.explored)
                                                 - explored_before)

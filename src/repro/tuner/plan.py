@@ -26,6 +26,11 @@ back into the plan from ledger-tagged timing samples.  A refreshed
 plan's ``measured_us`` overrides the simulator prediction as the
 cell's cost (``Choice.effective_time``) once enough samples landed.
 
+Format v5 adds the ``fused`` knob: a cell tuned fused expects the
+collective's epilogue/prologue compute to run inside a fused Pallas
+kernel (``kernels.fused_collectives``), which the sweep prices by
+folding the epilogue roofline into the cell's overlap window.
+
 Lookup is log2-bucketed with nearest-bucket fallback: an unseen message
 size resolves to the closest tuned bucket (ties to the smaller), an
 unseen rank count to the closest tuned nranks for that primitive, and
@@ -44,10 +49,12 @@ from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
                            InfiniBandConfig)
 from repro.core.topology import Topology
 
-PLAN_VERSION = 4          # v4 adds per-cell measured-cost feedback
-_READABLE_VERSIONS = (1, 2, 3, 4)
+PLAN_VERSION = 5          # v5 adds the per-cell fused-kernel knob
+_READABLE_VERSIONS = (1, 2, 3, 4, 5)
 # v1: flat cells only; v2: + per-cell overlap fields; v3: + level keys;
-# v4: + measured_us/sample_count/ewma_alpha (online re-tuning feedback).
+# v4: + measured_us/sample_count/ewma_alpha (online re-tuning feedback);
+# v5: + fused (epilogue/prologue folded into a fused collective+compute
+# kernel, kernels.fused_collectives).
 # Older formats load forward (missing fields default); unknown formats
 # raise PlanVersionError.
 
@@ -98,6 +105,12 @@ class Choice:
     measured_us: float = 0.0
     sample_count: int = 0
     ewma_alpha: float = 0.0
+    # Fused collective+compute kernel (plan format v5): True when the
+    # cell was priced with the collective's epilogue/prologue folded
+    # into a fused Pallas kernel (``kernels.fused_collectives``) - the
+    # epilogue roofline widens the overlap window, and the training
+    # stack realizes the fusion via ``TrainConfig.fuse_kernels``.
+    fused: bool = False
 
     def effective_time(self, min_samples: int = 1) -> float:
         """The cell's best per-launch cost estimate in seconds: the
@@ -247,7 +260,9 @@ class Plan:
                 # pre-v4 plans carry no measured feedback: offline-only
                 measured_us=float(e.get("measured_us", 0.0)),
                 sample_count=int(e.get("sample_count", 0)),
-                ewma_alpha=float(e.get("ewma_alpha", 0.0)))
+                ewma_alpha=float(e.get("ewma_alpha", 0.0)),
+                # pre-v5 plans carry no fusion knob: unfused
+                fused=bool(e.get("fused", False)))
         return plan
 
 

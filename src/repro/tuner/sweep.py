@@ -23,6 +23,14 @@ residency of the layer compute the collective is prefetched behind).
 Cells tuned this way carry ``overlap=True`` + the hidden wire time, and
 ``Communicator(backend='auto')`` books their bytes as overlap-hidden in
 the ledger.
+
+Primitives with fused collective+compute kernels (reduce_scatter,
+all_gather - see ``kernels.fused_collectives``) additionally sweep a
+``fused`` variant of every transport candidate: the fused variant's
+window is widened by the roofline residency of the epilogue it absorbs
+(``costmodel.fused_window``), so fusion competes in the same argmin as
+backend and slicing factor.  The fixed-knob baselines stay unfused, so
+regret keeps meaning "vs what a knob-free run would do".
 """
 from __future__ import annotations
 
@@ -62,14 +70,25 @@ SMOKE_GRID = TuneGrid(sizes=tuple(m * MiB for m in (1, 16, 256)),
 
 
 def _candidates(primitive: str, grid: TuneGrid, backends=("ring", "cxl")):
+    """Yield (backend, slicing_factor, allreduce_mode, fused) tuples.
+    Primitives with a fused collective+compute kernel
+    (``kernels.fused_collectives``: reduce_scatter epilogues, the
+    all_gather-consuming matmul) get a fused variant of every
+    transport candidate; the fused variant's window is widened by the
+    epilogue roofline in ``_tune_cell``."""
+    fusable = primitive in ("reduce_scatter", "all_gather")
     if "ring" in backends:
-        yield ("ring", mc.DEFAULT_CHUNKS, "two_phase")
+        yield ("ring", mc.DEFAULT_CHUNKS, "two_phase", False)
+        if fusable:
+            yield ("ring", mc.DEFAULT_CHUNKS, "two_phase", True)
     if "cxl" not in backends:
         return
     modes = grid.allreduce_modes if primitive == "all_reduce" \
         else ("two_phase",)
     for f, m in itertools.product(grid.slicing_factors, modes):
-        yield ("cxl", f, m)
+        yield ("cxl", f, m, False)
+        if fusable:
+            yield ("cxl", f, m, True)
 
 
 OverlapCompute = Union[float, Callable[[str, int, int], float], None]
@@ -82,21 +101,27 @@ def _tune_cell(prim: str, n: int, size: int, window: float,
     benchmarks can report regret."""
     best: Optional[Choice] = None
     fixed_best = math.inf
-    for backend, factor, mode in candidates:
+    for cand in candidates:
+        backend, factor, mode = cand[:3]
+        fz = bool(cand[3]) if len(cand) > 3 else False
         t_wire = cost_fn(backend, prim, n, size, factor, mode)
         # objective: exposed time under the overlap window (== t_wire
         # when no window); the window applies to every candidate, fixed
         # baselines included, so the never-slower-than-fixed guarantee
-        # is preserved.
-        t = max(0.0, t_wire - window)
-        if backend == "ring" or (factor == mc.DEFAULT_CHUNKS
-                                 and mode == "two_phase"):
+        # is preserved.  A fused candidate's window additionally folds
+        # in the epilogue roofline it absorbs into the transfer; the
+        # fixed baselines stay unfused so regret is measured against
+        # what a knob-free run would do.
+        w = costmodel.fused_window(prim, size, window) if fz else window
+        t = max(0.0, t_wire - w)
+        if not fz and (backend == "ring" or (factor == mc.DEFAULT_CHUNKS
+                                             and mode == "two_phase")):
             fixed_best = min(fixed_best, t)
         if best is None or t < best.predicted_time:
             best = Choice(backend=backend, slicing_factor=factor,
                           allreduce_mode=mode, predicted_time=t,
-                          overlap=window > 0.0,
-                          hidden_time=min(t_wire, window))
+                          overlap=w > 0.0,
+                          hidden_time=min(t_wire, w), fused=fz)
     return dataclasses.replace(best, baseline_time=fixed_best)
 
 

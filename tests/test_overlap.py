@@ -123,9 +123,17 @@ def test_overlap_plan_marks_cells_and_keeps_guarantee():
 def test_overlap_plan_per_cell_callable():
     window = lambda prim, size, n: 1e-3 if size >= 16 * MiB else 0.0
     plan = tuner.generate_plan(TINY, overlap_compute=window)
-    small = plan.lookup("all_gather", 1 * MiB, 3)
-    large = plan.lookup("all_gather", 16 * MiB, 3)
+    # all_reduce has no fused variant: its cells track the caller's
+    # window exactly
+    small = plan.lookup("all_reduce", 1 * MiB, 3)
+    large = plan.lookup("all_reduce", 16 * MiB, 3)
     assert not small.overlap and large.overlap
+    # all_gather cells carry a window even where the caller gave none:
+    # the fused variant folds its epilogue's roofline residency in and
+    # strictly wins the window-free cell
+    small_ag = plan.lookup("all_gather", 1 * MiB, 3)
+    assert small_ag.fused and small_ag.overlap
+    assert small_ag.hidden_time > 0.0
     assert plan.meta["overlap_compute_s"] == "per-cell"
 
 

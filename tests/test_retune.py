@@ -46,10 +46,11 @@ def _entry(**kw):
     return base
 
 
-def test_plan_v1_to_v4_compat_chain():
+def test_plan_v1_to_v5_compat_chain():
     """The same entries doc loads under every readable version, with
     the fields each version lacks defaulting: v1 has no overlap
-    fields, v1/v2 no level keys, v1-v3 no measured feedback."""
+    fields, v1/v2 no level keys, v1-v3 no measured feedback, v1-v4 no
+    fused knob."""
     for version in (1, 2, 3):
         p = tuner.Plan.from_json(
             {"version": version, "fingerprint": "f", "meta": {},
@@ -57,6 +58,7 @@ def test_plan_v1_to_v4_compat_chain():
         ch = p.entries[("all_gather", 20, 3)]
         assert ch.measured_us == 0.0 and ch.sample_count == 0
         assert ch.ewma_alpha == 0.0
+        assert ch.fused is False
         # pre-v4 cells cost by the oracle regardless of min_samples
         assert ch.effective_time(1) == ch.predicted_time
     v4 = {"version": 4, "fingerprint": "f", "meta": {},
@@ -65,22 +67,30 @@ def test_plan_v1_to_v4_compat_chain():
     p4 = tuner.Plan.from_json(v4)
     ch = p4.entries[("all_gather", 20, 3, "1:abc")]
     assert ch.measured_us == 1500.0 and ch.sample_count == 5
+    assert ch.fused is False        # pre-v5 cells are unfused
     # measured overrides the oracle once min_samples is met...
     assert ch.effective_time(3) == pytest.approx(1.5e-3)
     # ...but not before
     assert ch.effective_time(9) == ch.predicted_time
     again = tuner.Plan.from_json(p4.to_json())
     assert again.entries == p4.entries
-    assert p4.to_json()["version"] == 4
+    # v5: the fused knob round-trips
+    v5 = {"version": 5, "fingerprint": "f", "meta": {},
+          "entries": [_entry(fused=True)]}
+    p5 = tuner.Plan.from_json(v5)
+    assert p5.entries[("all_gather", 20, 3)].fused is True
+    again5 = tuner.Plan.from_json(p5.to_json())
+    assert again5.entries == p5.entries
+    assert p5.to_json()["version"] == 5
 
 
-def test_plan_v5_raises_version_error(tmp_path):
-    doc = {"version": 5, "fingerprint": "x", "entries": []}
+def test_plan_v6_raises_version_error(tmp_path):
+    doc = {"version": 6, "fingerprint": "x", "entries": []}
     path = tmp_path / "plan.json"
     path.write_text(json.dumps(doc))
     with pytest.raises(tuner.PlanVersionError) as ei:
         tuner.load_plan(str(path))
-    assert "5" in str(ei.value) and "(1, 2, 3, 4)" in str(ei.value)
+    assert "6" in str(ei.value) and "(1, 2, 3, 4, 5)" in str(ei.value)
 
 
 def test_saved_plan_roundtrips_measured_fields(tiny_plan, tmp_path):
@@ -385,7 +395,7 @@ def test_choices_changed_ignores_same_resolution_growth(tiny_plan):
 
 def test_fold_measurements_via_ledger(tiny_plan):
     """End-to-end tune --measurements path: ledger timing records in,
-    refreshed v4 plan out."""
+    refreshed v5 plan out."""
     ledger.reset()
     ch = tiny_plan.lookup("all_gather", 16 * MiB, 3)
     for _ in range(3):
@@ -399,7 +409,7 @@ def test_fold_measurements_via_ledger(tiny_plan):
     # half a second measured: every oracle candidate beats it
     assert (new.backend, new.slicing_factor) != \
         (ch.backend, ch.slicing_factor)
-    assert refined.to_json()["version"] == 4
+    assert refined.to_json()["version"] == 5
 
 
 def test_online_tuner_validates_args(tiny_plan):

@@ -244,7 +244,7 @@ def test_unknown_version_raises_plan_version_error(tmp_path):
     with pytest.raises(tuner.PlanVersionError) as ei:
         tuner.load_plan(str(path))
     msg = str(ei.value)
-    assert "99" in msg and "(1, 2, 3, 4)" in msg
+    assert "99" in msg and "(1, 2, 3, 4, 5)" in msg
     # PlanVersionError is a ValueError: existing catch sites still work
     assert isinstance(ei.value, ValueError)
     with pytest.raises(tuner.PlanVersionError):
@@ -369,12 +369,12 @@ def test_flat_fallback_never_drives_non_pool_fabric():
              tuner.Choice(backend="cxl", slicing_factor=8))
     comm = Communicator(backend="auto", plan=flat, topology=TOPO)
     ledger.reset()
-    be_pod, _, _, _ = comm._choice("all_gather", 16 * MiB, 4, TOPO,
-                                   "pod")
-    be_gpu, _, _, _ = comm._choice("all_gather", 16 * MiB, 4, TOPO,
-                                   "gpu")
-    be_node, _, _, _ = comm._choice("all_gather", 16 * MiB, 4, TOPO,
-                                    "node")
+    be_pod, _, _, _, _ = comm._choice("all_gather", 16 * MiB, 4, TOPO,
+                                      "pod")
+    be_gpu, _, _, _, _ = comm._choice("all_gather", 16 * MiB, 4, TOPO,
+                                      "gpu")
+    be_node, _, _, _, _ = comm._choice("all_gather", 16 * MiB, 4, TOPO,
+                                       "node")
     assert (be_pod, be_gpu) == ("ring", "ring")
     assert be_node == "cxl"           # the pool level may keep it
     audit = ledger.snapshot()["auto_choices"]

@@ -148,12 +148,13 @@ def test_communicator_accepts_auto(tiny_plan):
 def test_auto_choice_follows_plan_and_audits(tiny_plan):
     comm = Communicator(backend="auto", plan=tiny_plan)
     ledger.reset()
-    be, factor, mode, ov = comm._choice("all_gather", 16 * MiB, 3)
+    be, factor, mode, ov, fz = comm._choice("all_gather", 16 * MiB, 3)
     want = tiny_plan.lookup("all_gather", 16 * MiB, 3)
-    assert (be, factor, mode, ov) == (want.backend, want.slicing_factor,
-                                      want.allreduce_mode, want.overlap)
+    assert (be, factor, mode, ov, fz) == (
+        want.backend, want.slicing_factor, want.allreduce_mode,
+        want.overlap, want.fused)
     # untuned primitive falls back to ring with the communicator knobs
-    be2, _, _, _ = comm._choice("scatter", 1 * MiB, 3)
+    be2, _, _, _, _ = comm._choice("scatter", 1 * MiB, 3)
     assert be2 == "ring"
     audit = ledger.snapshot()["auto_choices"]
     assert [a["primitive"] for a in audit] == ["all_gather", "scatter"]
@@ -167,7 +168,7 @@ def test_auto_fixed_backends_do_not_audit():
     ledger.reset()
     comm = Communicator(backend="cxl", slicing_factor=8)
     assert comm._choice("all_gather", MiB, 4) == (
-        "cxl", 8, "two_phase", False)
+        "cxl", 8, "two_phase", False, False)
     assert ledger.snapshot()["auto_choices"] == []
 
 
