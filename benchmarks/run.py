@@ -23,6 +23,10 @@ Prints ``name,value,notes`` CSV.  Modules:
   resilience - chaos audit: rank death / link degrade / transient
              pool faults each driven through detect -> re-plan ->
              resume, with steps-lost and degraded-step-cost bounds
+  serving  - continuous batching + CXL-pooled KV cache vs the static
+             batch engine under Poisson arrivals (virtual clock over
+             the real scheduler/block-manager/pool-store), prompt-
+             reuse prefix sharing, tight-HBM eviction tiering
 
 ``--smoke`` runs the fast CI path: coarse-grid plan generation + the
 autotune and overlap audits (exercises the whole tuner + overlap stack
@@ -39,7 +43,7 @@ import time
 from benchmarks import (autotune, fig3_characterization, fig9_collectives,
                         fig10_scalability, fig11_chunks, fusion,
                         llm_case_study, observability, overlap, placement,
-                        resilience, retune, topology)
+                        resilience, retune, serving, topology)
 
 MODULES = [
     ("fig3", fig3_characterization),
@@ -55,10 +59,12 @@ MODULES = [
     ("placement", placement),
     ("observability", observability),
     ("resilience", resilience),
+    ("serving", serving),
 ]
 
 SMOKE_MODULES = ("fig3", "autotune", "overlap", "fusion", "topology",
-                 "retune", "placement", "observability", "resilience")
+                 "retune", "placement", "observability", "resilience",
+                 "serving")
 
 
 def main() -> None:

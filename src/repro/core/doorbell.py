@@ -87,6 +87,89 @@ class DoorbellRegion:
 
 
 @dataclasses.dataclass
+class RefcountRegion:
+    """Shared-ownership words in pool memory, doorbell-style.
+
+    The pooled KV prefix cache (``repro.serving.kvcache``) needs a
+    cross-engine reference count per pooled entry: how many engines
+    currently hold the entry's blocks live.  Each count is a single
+    word at the index-calculated address ``i * DOORBELL_BYTES`` in a
+    dedicated region after the doorbells - the same allocator-free
+    addressing as ``DoorbellRegion``, and the same store+flush /
+    invalidate+re-read discipline (every update flushes so other
+    sockets observe it; every read invalidates first).
+
+    Updates route through the pool fault shim
+    (``core.pool.check_fault``) so injected pool faults surface exactly
+    where the real pool store would fail.  A refcount word is only
+    meaningful once the entry's *commit* doorbell rang: publishers
+    write payload blocks, set the count, then ring - readers that poll
+    a STALE doorbell never trust the count.
+    """
+
+    capacity: int
+    _counts: list[int] = dataclasses.field(default_factory=list)
+    # Telemetry, doorbell-style.
+    updates: int = 0
+    polls: int = 0
+    flushes: int = 0
+
+    def __post_init__(self) -> None:
+        if self.capacity <= 0:
+            raise ValueError("refcount capacity must be positive")
+        self._counts = [0] * self.capacity
+
+    @property
+    def region_bytes(self) -> int:
+        return self.capacity * DOORBELL_BYTES
+
+    def address(self, index: int) -> int:
+        """Index-calculated refcount word address."""
+        self._check(index)
+        return index * DOORBELL_BYTES
+
+    def acquire(self, index: int, rank: int = 0) -> int:
+        """Increment and flush; returns the new count."""
+        return self._update(index, +1, rank)
+
+    def release(self, index: int, rank: int = 0) -> int:
+        """Decrement and flush; returns the new count (>= 0 enforced:
+        a double release is a protocol bug, not a no-op)."""
+        if self._counts[index] <= 0:
+            raise ValueError(
+                f"refcount word {index} released below zero")
+        return self._update(index, -1, rank)
+
+    def read(self, index: int) -> int:
+        """Invalidate + re-read one count word."""
+        self._check(index)
+        self.polls += 1
+        self.flushes += 1
+        return self._counts[index]
+
+    def reset(self, index: int) -> None:
+        """Owner resets the word when the entry's blocks are reclaimed."""
+        self._check(index)
+        self._counts[index] = 0
+
+    def _update(self, index: int, delta: int, rank: int) -> int:
+        self._check(index)
+        from repro.core import pool as _pool  # late: pool imports us
+        _pool.check_fault("refcount", rank=rank, index=index,
+                          offset=self.address(index))
+        self._counts[index] += delta
+        self.updates += 1
+        self.flushes += 1
+        return self._counts[index]
+
+    def _check(self, index: int) -> None:
+        if not 0 <= index < self.capacity:
+            raise IndexError(
+                f"refcount index {index} out of range "
+                f"[0, {self.capacity})")
+
+
+@dataclasses.dataclass
 class HeartbeatRegion:
     """Per-rank liveness words in pool memory, reusing the doorbell
     protocol.

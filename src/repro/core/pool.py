@@ -90,6 +90,138 @@ def with_retries(fn: Callable[[], Any], *, retries: int = 3,
                 sleep(backoff_s * (2 ** (attempt - 1)))
 
 
+class PoolBlockAllocator:
+    """Fixed-size block allocator over a region of pool memory.
+
+    The serving KV-cache tier (``repro.serving.kvcache``) stores evicted
+    and prefix-shared cache pages here: ``capacity_bytes`` of emulated
+    pool memory split into equal ``block_bytes`` blocks, handed out from
+    a free list by pure index calculation (no metadata in the pool, in
+    the spirit of the paper's allocator-free doorbell addressing).
+    Block payload I/O goes through the module fault shim
+    (``check_fault``) with bounded retry-with-backoff, exactly like
+    ``training.checkpoint.PoolCheckpointStore``, so injected pool
+    faults surface where a real CXL load/store would fail.
+
+    ``predict_write_s``/``predict_read_s`` price one block transfer with
+    the pool cost model (per-copy software overhead + bytes over the
+    pool server link) - the same numbers the tuner's oracles use for
+    wire traffic - so cache-placement decisions can be costed against
+    recompute before any byte moves.
+    """
+
+    def __init__(self, capacity_bytes: int, block_bytes: int,
+                 cfg: Optional["CXLPoolConfig"] = None, *,
+                 retries: int = 3, backoff_s: float = 0.0,
+                 sleep: Callable[[float], None] = lambda _s: None):
+        from repro.core.hw import CXL_POOL
+        if block_bytes <= 0:
+            raise ValueError("block_bytes must be positive")
+        self.block_bytes = int(block_bytes)
+        self.num_blocks = int(capacity_bytes) // self.block_bytes
+        if self.num_blocks <= 0:
+            raise ValueError(
+                f"pool capacity {capacity_bytes} holds no "
+                f"{block_bytes}-byte block")
+        self.cfg = cfg or CXL_POOL
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.sleep = sleep
+        self._mem = np.zeros(self.num_blocks * self.block_bytes,
+                             dtype=np.uint8)
+        self._free: list[int] = list(range(self.num_blocks - 1, -1, -1))
+        # Telemetry for tests / metrics export.
+        self.writes = 0
+        self.reads = 0
+        self.retried = 0
+
+    # -- addressing (pure index calculation) ------------------------------
+    def offset(self, block: int) -> int:
+        self._check(block)
+        return block * self.block_bytes
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self, n: int = 1) -> list[int]:
+        """Allocate ``n`` blocks; raises ``MemoryError`` when the pool
+        budget is exhausted (callers decide whether to evict or fail)."""
+        if n > len(self._free):
+            raise MemoryError(
+                f"pool block budget exhausted: want {n}, "
+                f"{len(self._free)}/{self.num_blocks} free")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            self._check(b)
+            if b in self._free:
+                raise ValueError(f"double free of pool block {b}")
+            self._free.append(b)
+
+    # -- payload I/O through the fault shim -------------------------------
+    def write_block(self, block: int, data: bytes, *,
+                    rank: int = 0) -> None:
+        if len(data) > self.block_bytes:
+            raise ValueError(
+                f"payload {len(data)} bytes > block {self.block_bytes}")
+        off = self.offset(block)
+
+        def attempt() -> None:
+            check_fault("kv_write", rank=rank, offset=off,
+                        size=len(data))
+            self._mem[off:off + len(data)] = np.frombuffer(
+                data, dtype=np.uint8)
+
+        def note(_attempt: int, _exc: Exception) -> None:
+            self.retried += 1
+
+        with_retries(attempt, retries=self.retries,
+                     backoff_s=self.backoff_s, sleep=self.sleep,
+                     on_retry=note)
+        self.writes += 1
+
+    def read_block(self, block: int, nbytes: Optional[int] = None, *,
+                   rank: int = 0) -> bytes:
+        nbytes = self.block_bytes if nbytes is None else int(nbytes)
+        off = self.offset(block)
+
+        def attempt() -> bytes:
+            check_fault("kv_read", rank=rank, offset=off, size=nbytes)
+            return bytes(self._mem[off:off + nbytes])
+
+        def note(_attempt: int, _exc: Exception) -> None:
+            self.retried += 1
+
+        out = with_retries(attempt, retries=self.retries,
+                           backoff_s=self.backoff_s, sleep=self.sleep,
+                           on_retry=note)
+        self.reads += 1
+        return out
+
+    # -- cost model -------------------------------------------------------
+    def predict_write_s(self, nbytes: Optional[int] = None) -> float:
+        """One block write: per-copy software overhead + bytes over the
+        pool server link (same constants as the tuner's pool oracle)."""
+        n = self.block_bytes if nbytes is None else int(nbytes)
+        return self.cfg.memcpy_overhead + n / self.cfg.server_bw
+
+    def predict_read_s(self, nbytes: Optional[int] = None) -> float:
+        n = self.block_bytes if nbytes is None else int(nbytes)
+        return (self.cfg.memcpy_overhead + n / self.cfg.server_bw
+                + self.cfg.access_latency)
+
+    def _check(self, block: int) -> None:
+        if not 0 <= block < self.num_blocks:
+            raise IndexError(
+                f"pool block {block} out of range [0, {self.num_blocks})")
+
+
 class PoolEmulator:
     """A byte-addressable emulation of the unified pool address space."""
 

@@ -39,6 +39,7 @@ def summarize(events: list, top: int = 8) -> str:
     steps = [e for e in events if e.get("kind") == "step"]
     retunes = [e for e in events if e.get("kind") == "retune"]
     health = [e for e in events if e.get("kind") == "health"]
+    diags = [e for e in events if e.get("kind") == "diag"]
     metrics = [e for e in events if e.get("kind") == "metric"]
     summary = next((e for e in events if e.get("kind") == "summary"),
                    {})
@@ -91,8 +92,29 @@ def summarize(events: list, top: int = 8) -> str:
         out.append(f"health: link {e.get('link')} {e.get('event')} at "
                    f"step {e.get('step')} "
                    f"(slowdown {e.get('slowdown')}x)")
+    if diags:
+        out.append(f"diagnostics: {len(diags)}")
+        for e in diags[:top]:
+            out.append(f"  [{e.get('source')}] {e.get('msg')}")
+        if len(diags) > top:
+            out.append(f"  ... {len(diags) - top} more")
     degraded = summary.get("degraded_links")
     out.append(f"degraded links at exit: {degraded or 'none'}")
+
+    # serving-trace summary (serve --trace poisson writes these into
+    # the final summary event and exports repro_serve_* gauges)
+    if "req_per_s" in summary:
+        out.append(f"serving: {summary['req_per_s']:.2f} req/s over "
+                   f"{summary.get('requests')} requests  "
+                   f"latency p50 "
+                   f"{summary.get('latency_p50_s', 0.0):.3f}s  "
+                   f"p99 {summary.get('latency_p99_s', 0.0):.3f}s")
+    serve = sorted((m["name"], m["value"]) for m in metrics
+                   if m["name"].startswith("repro_serve_"))
+    if serve:
+        out.append("serving counters at exit:")
+        for name, v in serve:
+            out.append(f"  {name[len('repro_serve_'):]}  {v:g}")
 
     wire = {tuple(sorted(m["labels"].items())): m["value"]
             for m in metrics if m["name"] == "repro_wire_bytes"}

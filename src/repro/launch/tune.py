@@ -108,8 +108,22 @@ def main() -> None:
                          "declared level sizes - innermost placeable "
                          "level is the model axis, the rest multiply "
                          "into the data axis)")
+    ap.add_argument("--kv-block-bytes", type=int, nargs="+",
+                    default=None, metavar="BYTES",
+                    help="also tune kv_block cache-placement cells "
+                         "(serving eviction: CXL pool round-trip vs "
+                         "prefill recompute) at these KV-image sizes; "
+                         "consumed by repro.serving ServeEngine via "
+                         "--plan; requires --kv-arch to price the "
+                         "recompute arm")
+    ap.add_argument("--kv-arch", default=None, metavar="ARCH",
+                    help="architecture whose cache footprint and "
+                         "active parameter count price the kv_block "
+                         "recompute arm")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
+    if args.kv_block_bytes and not args.kv_arch:
+        ap.error("--kv-block-bytes requires --kv-arch")
 
     base = tuner.SMOKE_GRID if args.smoke else tuner.DEFAULT_GRID
     grid = tuner.TuneGrid(
@@ -156,6 +170,29 @@ def main() -> None:
                        for c in plan.entries.values())
         print(f"folded {len(timings)} measured samples into "
               f"{measured} cells")
+    if args.kv_block_bytes:
+        # Serving-tier cells: same Plan, primitive "kv_block", priced
+        # by the shared CXL cost constants.  ServeEngine's eviction
+        # path looks these up before falling back to the live oracle.
+        import jax.numpy as jnp
+
+        from repro.configs import get_config
+        from repro.models.pcontext import UNSHARDED
+        from repro.serving import kvcache
+        kcfg = get_config(args.kv_arch, smoke=args.smoke)
+        layout = kvcache.CacheLayout(kcfg, UNSHARDED, 1, 128,
+                                     jnp.dtype("float32"))
+        per_tok = max(1, layout.bytes_for(64) // 64)
+        picks = collections.Counter()
+        for nbytes in args.kv_block_bytes:
+            ntok = max(1, nbytes // per_tok)
+            choice = kvcache.price_kv_block(
+                nbytes, 2.0 * kcfg.active_param_count() * ntok)
+            plan.add("kv_block", nbytes, 1, choice)
+            picks[choice.backend] += 1
+        print(f"  kv_block ({args.kv_arch}, "
+              f"{per_tok} B/token): {dict(picks)} over "
+              f"{len(args.kv_block_bytes)} sizes")
     if args.placement_report:
         if topology is None:
             ap.error("--placement-report requires --topology")

@@ -237,9 +237,13 @@ def decode_attention(params: Params, x: jnp.ndarray, cache_k, cache_v,
 
     x: (B, 1, d_model).  cache_{k,v}: (B, S_local, n_kv, hd) - the local
     slice of a cache whose *global* sequence length is S_local * tp (tp
-    sharded) or S_local (unsharded).  ``pos``: scalar int32, the global
-    position being written (for a ring-buffer window cache the caller
-    passes ``kv_write_pos`` = pos % window).
+    sharded) or S_local (unsharded).  ``pos``: the global position being
+    written - a scalar int32 (whole batch at one position, the static
+    batch-synchronous path) or a ``(B,)`` int32 vector (per-slot
+    positions, the continuous-batching engine where every decode slot
+    carries its own request).  For a ring-buffer window cache the
+    caller passes ``kv_write_pos`` = pos % window (same rank as
+    ``pos``).
 
     Returns (attn_out (B,1,d_model), new_cache_k, new_cache_v).
     """
@@ -247,16 +251,18 @@ def decode_attention(params: Params, x: jnp.ndarray, cache_k, cache_v,
     b = x.shape[0]
     s_local = cache_k.shape[1]
     tp_idx = pc.tp_index()
+    vec = jnp.ndim(pos) > 0   # per-slot positions (trace-time static)
 
     q = dense(x, params["wq"]).reshape(b, 1, d.n_q, d.head_dim)
-    q = apply_rope(q, pos[None].reshape(1,), cfg.rope_theta)
+    rope_pos = pos.reshape(b, 1) if vec else pos[None].reshape(1,)
+    q = apply_rope(q, rope_pos, cfg.rope_theta)
     # KV for the new token: computed on every shard (redundant but tiny),
     # using the *full* kv-head projection when kv is replicated; when kv
     # is head-sharded we gather the heads so the seq-sharded cache holds
     # all kv heads.
     k_new = dense(x, params["wk"]).reshape(b, 1, d.n_kv, d.head_dim)
     v_new = dense(x, params["wv"]).reshape(b, 1, d.n_kv, d.head_dim)
-    k_new = apply_rope(k_new, pos[None].reshape(1,), cfg.rope_theta)
+    k_new = apply_rope(k_new, rope_pos, cfg.rope_theta)
     if d.kv_sharded and pc.tp > 1:
         # (B,1,n_kv_local,hd) -> all heads: gather over tp along head dim
         k_new = _gather_heads(k_new, pc)
@@ -268,14 +274,25 @@ def decode_attention(params: Params, x: jnp.ndarray, cache_k, cache_v,
     owner = (write // s_local) if pc.tp > 1 else jnp.int32(0)
     local_off = write % s_local
     sel = (owner == tp_idx) | (pc.tp == 1)
-    upd_k = lax.dynamic_update_slice(
-        cache_k, k_new.astype(cache_k.dtype),
-        (0, local_off.astype(jnp.int32), 0, 0))
-    upd_v = lax.dynamic_update_slice(
-        cache_v, v_new.astype(cache_v.dtype),
-        (0, local_off.astype(jnp.int32), 0, 0))
-    cache_k = jnp.where(sel, upd_k, cache_k)
-    cache_v = jnp.where(sel, upd_v, cache_v)
+    if vec:
+        # Per-slot write offsets: a dynamic_update_slice cannot take a
+        # batch of offsets, so the write is a one-hot select over the
+        # local sequence axis (O(S) lanes, exact - only the hit slot of
+        # a selected batch row changes).
+        hit = jnp.arange(s_local)[None, :] == local_off[:, None]
+        sel_b = jnp.broadcast_to(sel, (b,))  # scalar True when tp == 1
+        mask4 = (hit & sel_b[:, None])[..., None, None]     # (B,S,1,1)
+        cache_k = jnp.where(mask4, k_new.astype(cache_k.dtype), cache_k)
+        cache_v = jnp.where(mask4, v_new.astype(cache_v.dtype), cache_v)
+    else:
+        upd_k = lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype),
+            (0, local_off.astype(jnp.int32), 0, 0))
+        upd_v = lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype),
+            (0, local_off.astype(jnp.int32), 0, 0))
+        cache_k = jnp.where(sel, upd_k, cache_k)
+        cache_v = jnp.where(sel, upd_v, cache_v)
 
     # Partial attention over the local sequence slice, all q heads.
     q_full = _gather_heads(q, pc) if pc.tp > 1 else q   # (B,1,Hq_full,hd)
@@ -288,12 +305,13 @@ def decode_attention(params: Params, x: jnp.ndarray, cache_k, cache_v,
     base = tp_idx * s_local if pc.tp > 1 else 0
     slot_pos = base + jnp.arange(s_local)
     sp = slot_pos[None, None, None, :]
+    pv = pos.reshape(b, 1, 1, 1) if vec else pos
     if window is not None:
         # ring buffer: before the buffer wraps (pos < window) only slots
         # <= pos hold data; afterwards every slot is live.
-        valid = (sp <= pos) | (pos >= window)
+        valid = (sp <= pv) | (pv >= window)
     else:
-        valid = sp <= pos
+        valid = sp <= pv
     logits = jnp.where(valid, logits, -jnp.inf)
     m = jnp.max(logits, axis=-1)                          # (B,H,1)
     m_glob = pc.tp_psum_max(m)

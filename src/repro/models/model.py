@@ -297,8 +297,11 @@ def init_cache(cfg: ModelConfig, pc: ParallelContext, batch: int,
 def decode_step(params: Params, caches: list, tokens: jnp.ndarray,
                 pos: jnp.ndarray, cfg: ModelConfig, pc: ParallelContext,
                 window: Optional[int] = None):
-    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 global
-    position.  Returns (logits (B, 1, V_padded), new_caches)."""
+    """One decode step.  tokens: (B, 1) int32; pos: the global position
+    being decoded - scalar int32 (whole batch in lockstep) or (B,)
+    int32 (per-slot positions for the continuous-batching engine; see
+    ``layers.decode_attention``).  Returns (logits (B, 1, V_padded),
+    new_caches)."""
     h = layers.embed_tokens(params["embed"], tokens, cfg, pc)
     groups = blocks.scan_groups(cfg)
     new_caches = []

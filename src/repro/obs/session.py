@@ -107,6 +107,19 @@ class ObsSession:
                     **(extra or {})})
         return events
 
+    def diag(self, source: str, msg: str) -> None:
+        """Book a diagnostic line: counted in the registry, persisted
+        as a ``kind: diag`` event (``launch/report.py`` surfaces them),
+        and echoed through the session log - the structured replacement
+        for a launcher's bare ``print``."""
+        self.log(f"[{source}] {msg}")
+        if not self.enabled:
+            return
+        self.registry.counter(
+            "repro_diag_total",
+            "diagnostic lines emitted").inc(source=source)
+        self._emit({"kind": "diag", "source": source, "msg": msg})
+
     def on_retune(self, *, epoch: int, swapped: bool,
                   regret_s: "float | None" = None,
                   measured_cells: "int | None" = None) -> None:

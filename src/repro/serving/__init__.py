@@ -1,3 +1,9 @@
-from repro.serving.engine import ServeEngine, ServeConfig
+from repro.serving.engine import ServeConfig, ServeEngine
+from repro.serving.kvcache import (BlockManager, CacheLayout,
+                                   PooledKVStore, chain_hashes)
+from repro.serving.scheduler import (Request, RequestState,
+                                     SamplingParams, Scheduler)
 
-__all__ = ["ServeEngine", "ServeConfig"]
+__all__ = ["ServeEngine", "ServeConfig", "Request", "SamplingParams",
+           "RequestState", "Scheduler", "BlockManager", "CacheLayout",
+           "PooledKVStore", "chain_hashes"]

@@ -137,3 +137,33 @@ def test_serve_launcher():
         cwd=ROOT)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "tok/s" in proc.stdout
+
+
+@pytest.mark.slow
+def test_serve_launcher_poisson_trace(tmp_path):
+    """Request-trace mode end to end: Poisson arrivals through
+    submit/step/poll, pooled prefix hits at nonzero prompt reuse, and
+    the serving gauges in the metrics stream."""
+    import json
+    metrics = str(tmp_path / "serve.jsonl")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch",
+         "llama3.2-1b", "--smoke", "--trace", "poisson",
+         "--requests", "12", "--arrival-rate", "0.5",
+         "--prompt-reuse", "0.6", "--prompt-len", "24",
+         "--kv-block-tokens", "8", "--new-tokens", "4",
+         "--decode-slots", "2", "--metrics-out", metrics],
+        env=_env(), capture_output=True, text=True, timeout=1200,
+        cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "trace poisson" in proc.stdout
+    assert "req/s" in proc.stdout
+    assert "prefix hits" in proc.stdout
+    events = [json.loads(l) for l in open(metrics) if l.strip()]
+    summary = next(e for e in events if e.get("kind") == "summary")
+    assert summary["requests"] == 12
+    assert summary["req_per_s"] > 0
+    hits = next(e for e in events
+                if e.get("kind") == "metric"
+                and e["name"] == "repro_serve_prefix_hits_total")
+    assert hits["value"] > 0

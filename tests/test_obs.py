@@ -547,6 +547,28 @@ def test_report_summarize(tmp_path):
     assert "trace-time wire bytes/step" in text
 
 
+def test_obs_session_diag_routes_to_report(tmp_path):
+    """A launcher diagnostic routed through ``diag`` is counted,
+    persisted as a kind=diag event, and surfaced by the report."""
+    metrics_out = str(tmp_path / "run.jsonl")
+    logged = []
+    sess = ObsSession(metrics_out=metrics_out, health=False,
+                      log=logged.append)
+    sess.diag("serve", "plan loaded but the engine is unsharded")
+    sess.finalize()
+    assert logged[0].startswith("[serve] plan loaded")
+    events = report.load_events(metrics_out)
+    diag = next(e for e in events if e.get("kind") == "diag")
+    assert diag["source"] == "serve"
+    counted = next(e for e in events
+                   if e.get("kind") == "metric"
+                   and e["name"] == "repro_diag_total")
+    assert counted["value"] == 1
+    text = report.summarize(events)
+    assert "diagnostics: 1" in text
+    assert "[serve] plan loaded but the engine is unsharded" in text
+
+
 def test_report_summarize_trace(tmp_path):
     tr = enable_tracing(capacity_steps=4)
     with tr.step(0):
