@@ -185,6 +185,6 @@ def run(emit, smoke: bool = False) -> None:
          f"(CI artifact)")
     with open(PLAN_ARTIFACT) as f:
         doc = json.load(f)
-    assert doc["version"] == 5
+    assert doc["version"] == 6
     assert any(e.get("sample_count", 0) >= MIN_SAMPLES
                for e in doc["entries"])

@@ -27,6 +27,9 @@ Prints ``name,value,notes`` CSV.  Modules:
              batch engine under Poisson arrivals (virtual clock over
              the real scheduler/block-manager/pool-store), prompt-
              reuse prefix sharing, tight-HBM eviction tiering
+  pipeline - PP x TP x FSDP vs FSDP-only at fixed device count
+             (stage handoff over tuned CXL/IB p2p cells), per-level
+             p2p plan-cell coverage, 1F1B/interleaved bubble audit
 
 ``--smoke`` runs the fast CI path: coarse-grid plan generation + the
 autotune and overlap audits (exercises the whole tuner + overlap stack
@@ -42,8 +45,8 @@ import time
 
 from benchmarks import (autotune, fig3_characterization, fig9_collectives,
                         fig10_scalability, fig11_chunks, fusion,
-                        llm_case_study, observability, overlap, placement,
-                        resilience, retune, serving, topology)
+                        llm_case_study, observability, overlap, pipeline,
+                        placement, resilience, retune, serving, topology)
 
 MODULES = [
     ("fig3", fig3_characterization),
@@ -60,11 +63,12 @@ MODULES = [
     ("observability", observability),
     ("resilience", resilience),
     ("serving", serving),
+    ("pipeline", pipeline),
 ]
 
 SMOKE_MODULES = ("fig3", "autotune", "overlap", "fusion", "topology",
                  "retune", "placement", "observability", "resilience",
-                 "serving")
+                 "serving", "pipeline")
 
 
 def main() -> None:

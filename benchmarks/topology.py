@@ -141,4 +141,4 @@ def run(emit, smoke: bool = False) -> None:
     if os.path.exists(PLAN_ARTIFACT):
         with open(PLAN_ARTIFACT) as f:
             doc = json.load(f)
-        assert doc["version"] == 5 and doc["meta"].get("topology")
+        assert doc["version"] == 6 and doc["meta"].get("topology")

@@ -56,6 +56,18 @@ primitives that still run the flat single-axis path on a ragged axis
 hierarchy-blind, and every such call books an explicit
 ``ledger.record_fallback`` event - never a silent degradation.
 
+**Point-to-point** (pipeline parallelism): ``send``/``recv`` move one
+full payload one ring hop along an axis - the stage-boundary
+activation/grad handoff of ``training.pipeline``.  Two backends: ``cxl``
+writes the payload to the pool and commits it with a doorbell ring
+(``core/doorbell.py``; the consumer invalidates, polls and reads), and
+``ring`` is the plain NIC/ICI transfer.  On the TPU mesh both lower to
+``lax.ppermute`` - data dependence of the permute chain enforces the
+RAW ordering the doorbell protects, so (as with the ragged schedules)
+the plan's per-(size bucket, level) ``p2p`` cell steers the slicing
+factor and the audit, not the lowering.  Wire bytes are S per rank per
+hop, attributed to the level/fabric that carries them.
+
 **Fused kernels**: plan cells carry a ``fused`` knob (format v5) - the
 tuner's prediction that the collective's epilogue/prologue compute is
 worth folding into the transfer (``kernels.fused_collectives``).  The
@@ -514,6 +526,42 @@ class Communicator:
                                  tiled=False)
             return out.reshape(x.shape)
         return mc.all_to_all(x, ax, n_chunks=factor)
+
+    # -- point-to-point (pipeline stage boundaries) -----------------------
+
+    def send(self, x: jnp.ndarray, axis: AxisSpec, *,
+             shift: int = 1) -> jnp.ndarray:
+        """Ring point-to-point handoff: every rank sends ``x`` to the
+        rank ``shift`` ahead on ``axis`` and returns the payload it
+        received from the rank ``shift`` behind (cyclic).  SPMD-
+        symmetric - all ranks call it, which is exactly the pipeline
+        pattern (stage s pushes activations to s+1 while receiving
+        from s-1).  The resolved ``p2p`` plan cell picks the transport:
+        ``cxl`` is the pool write + doorbell commit + consumer read,
+        ``ring`` the direct NIC/ICI hop; both move S wire bytes per
+        rank, booked against the level/fabric that carries them."""
+        axes = _axes(axis)
+        if len(axes) != 1:
+            raise NotImplementedError("send/recv are single-axis")
+        ax = axes[0]
+        topo = self._topo()
+        n = lax.axis_size(ax)
+        if n == 1 or shift % n == 0:
+            return x
+        s = ledger.nbytes(x)
+        backend, factor, _, ov, _ = self._choice("p2p", s, n, topo, ax)
+        self._rec("p2p", float(s), ov, topo, ax)
+        if backend == "ring":
+            return lax.ppermute(x, ax, mc._ring_perm(n, shift % n))
+        return mc.p2p_shift(x, ax, shift=shift, n_chunks=factor)
+
+    def recv(self, x: jnp.ndarray, axis: AxisSpec, *,
+             shift: int = 1) -> jnp.ndarray:
+        """The reverse hop of :meth:`send`: every rank sends ``x`` to
+        the rank ``shift`` *behind* and returns the payload received
+        from the rank ``shift`` ahead - the backward-pass gradient
+        handoff (stage s pushes grads to s-1)."""
+        return self.send(x, axis, shift=-shift)
 
     # -- rooted primitives ------------------------------------------------
     # Tuple axes decompose with per-level roots derived from the flat

@@ -16,6 +16,8 @@ local payload s bytes):
     all_to_all      s * (n-1) / n
     broadcast       s                    (pipelined forward)
     scatter         s * (n-1) / n        (root's outgoing segments)
+    p2p             s                    (one full-payload ring hop:
+                                          the pipeline stage handoff)
 
 Overlap accounting: collectives issued inside a ``ledger.hidden()``
 region (the double-buffered FSDP prefetch, or an ``auto`` plan cell

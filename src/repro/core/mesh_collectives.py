@@ -337,6 +337,28 @@ def _split_chunks(x: jnp.ndarray, n_chunks: int) -> list[jnp.ndarray]:
     return list(jnp.split(x, n_chunks, axis=0))
 
 
+def p2p_shift(x: jnp.ndarray, axis_name: str, shift: int = 1,
+              n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
+    """Point-to-point ring shift: every rank sends ``x`` to the rank
+    ``shift`` ahead on the axis and returns the payload received from
+    the rank ``shift`` behind (cyclic).  This is the pipeline-parallel
+    activation/grad handoff primitive: the whole payload moves exactly
+    one hop, so wire bytes are S per rank per call.
+
+    On the pool this is a write + doorbell commit + consumer read; on
+    the TPU mesh both backends lower to per-chunk ``ppermute`` (SSA
+    data dependence replaces the doorbell, exactly as for the
+    collectives above), with the slicing factor pipelining the
+    producer write against the consumer read."""
+    n = lax.axis_size(axis_name)
+    if n == 1 or shift % n == 0:
+        return x
+    perm = _ring_perm(n, shift % n)
+    moved = [lax.ppermute(c, axis_name, perm)
+             for c in _split_chunks(x, n_chunks)]
+    return jnp.concatenate(moved, axis=0) if len(moved) > 1 else moved[0]
+
+
 def all_gather(x: jnp.ndarray, axis_name: str,
                n_chunks: int = DEFAULT_CHUNKS) -> jnp.ndarray:
     """Chunked ring all-gather; returns shards concatenated along axis 0 in

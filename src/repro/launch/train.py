@@ -9,6 +9,9 @@ Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
       --mesh 2x4 --steps 20
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --pp-stages 2 --microbatches 4 --pp-schedule 1f1b --batch 16
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
       --smoke --backend auto --plan plan.json --online-retune \
       --retune-interval 10 --plan-out refined.json
@@ -95,7 +98,26 @@ def main() -> None:
     ap.add_argument("--slicing-factor", type=int, default=4)
     ap.add_argument("--allreduce-mode", default="two_phase",
                     choices=["two_phase", "faithful"])
-    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation splits; with "
+                         "--pp-stages > 1 this is the pipeline "
+                         "microbatch count M (bubble fraction "
+                         "(S-1)/(M+S-1) under 1F1B)")
+    ap.add_argument("--pp-stages", type=int, default=1,
+                    help="pipeline stages: > 1 trains on a "
+                         "(stage, data) mesh with the microbatch "
+                         "pipeline (training.pipeline); activation/"
+                         "grad handoffs ride the tuned p2p plan cells "
+                         "(cxl pool write + doorbell commit vs direct "
+                         "IB hop)")
+    ap.add_argument("--pp-schedule", default="1f1b",
+                    choices=["1f1b", "interleaved"],
+                    help="pipeline schedule driving bubble accounting "
+                         "and realizability validation (interleaved "
+                         "needs microbatches %% stages == 0)")
+    ap.add_argument("--pp-chunks", type=int, default=2,
+                    help="model chunks per stage under --pp-schedule "
+                         "interleaved")
     ap.add_argument("--bucket-mb", type=float, default=25.0,
                     help="grad-sync AllReduce bucket cap in MiB; any "
                          "value > 0 also row-fuses the FSDP gathers "
@@ -119,6 +141,12 @@ def main() -> None:
                          "(--topology or a topology plan) and --mesh "
                          "for the DP/TP degrees.  Applies the best "
                          "assignment that keeps the TP axis unsplit")
+    ap.add_argument("--placement-from-dryrun", default=None,
+                    help="dry-run JSON record (launch.dryrun --backend "
+                         "auto): build the placement CollectiveMix "
+                         "from its recorded auto_choices audit "
+                         "(CollectiveMix.from_dryrun) instead of the "
+                         "analytic per-model mix; needs --placement")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--metrics-out", default=None,
                     help="write step/retune/health events + final "
@@ -175,6 +203,20 @@ def main() -> None:
     if args.timing_source != "step" and args.backend != "auto":
         ap.error("--timing-source emulator/profiler needs the "
                  "--backend auto audit to key samples to plan cells")
+    if args.placement_from_dryrun and not args.placement:
+        ap.error("--placement-from-dryrun feeds the placement "
+                 "planner; add --placement auto")
+    if args.pp_stages > 1:
+        for on, flag in ((args.online_retune, "--online-retune"),
+                         (args.resilience, "--resilience"),
+                         (args.fault_plan, "--fault-plan"),
+                         (args.placement, "--placement"),
+                         (args.timing_source != "step",
+                          "--timing-source emulator/profiler")):
+            if on:
+                ap.error(f"{flag} is not supported with "
+                         f"--pp-stages > 1 (plain pipeline training "
+                         f"path only)")
 
     from repro.core.topology import (get_active_topology, parse_topology,
                                      set_active_topology, warn_uncovered)
@@ -188,7 +230,19 @@ def main() -> None:
         from repro.tuner import activate_plan_file
         activate_plan_file(args.plan, pool=CXL_POOL, ib=INFINIBAND)
     cfg = get_config(args.arch, smoke=args.smoke)
-    if args.placement:
+    if args.pp_stages > 1:
+        ndev = jax.device_count()
+        pp = args.pp_stages
+        if ndev % pp:
+            ap.error(f"--pp-stages {pp} does not divide "
+                     f"{ndev} devices")
+        dpsz = ndev // pp
+        if args.batch % (dpsz * args.microbatches):
+            ap.error(f"--batch {args.batch} must split over "
+                     f"{dpsz} data ranks x {args.microbatches} "
+                     f"microbatches")
+        mesh = jax.make_mesh((pp, dpsz), ("stage", "data"))
+    elif args.placement:
         from repro import tuner
         from repro.launch.mesh import make_placed_mesh
         topo = get_active_topology()
@@ -199,9 +253,16 @@ def main() -> None:
             ap.error("--placement requires --mesh DPxTP for the "
                      "logical axis degrees")
         dp, tp = (int(x) for x in args.mesh.split("x"))
-        mix = tuner.CollectiveMix.for_model(
-            cfg, {"data": dp, "model": tp}, seq=args.seq,
-            batch_per_rank=max(1, args.batch // max(1, dp)))
+        if args.placement_from_dryrun:
+            import json
+            with open(args.placement_from_dryrun) as f:
+                record = json.load(f)
+            mix = tuner.CollectiveMix.from_dryrun(
+                record, {"data": dp, "model": tp})
+        else:
+            mix = tuner.CollectiveMix.for_model(
+                cfg, {"data": dp, "model": tp}, seq=args.seq,
+                batch_per_rank=max(1, args.batch // max(1, dp)))
         pplan = tuner.plan_placement(mix, topo) \
             if args.placement == "auto" \
             else tuner.load_placement(args.placement)
@@ -227,9 +288,24 @@ def main() -> None:
                        fuse_kernels=args.fuse_kernels)
     from repro.core import ledger
     ledger.reset()
-    step, pspecs, bspecs, pc = make_sharded_train_step(
-        cfg, tcfg, mesh, dp_axis=dp_axes(mesh))
-    tp = mesh.shape["model"]
+    if args.pp_stages > 1:
+        from repro.training.pipeline import (bubble_fraction,
+                                             make_sharded_pipeline_step)
+        step, pspecs, bspecs, pc = make_sharded_pipeline_step(
+            cfg, tcfg, mesh, n_microbatches=args.microbatches,
+            schedule=args.pp_schedule, n_chunks=args.pp_chunks)
+        tp = 1
+        bub = bubble_fraction(args.pp_stages, args.microbatches,
+                              args.pp_schedule, args.pp_chunks)
+        print(f"pipeline: {args.pp_stages} stages x "
+              f"{dict(mesh.shape)['data']} dp, "
+              f"{args.microbatches} microbatches, "
+              f"schedule {args.pp_schedule}, "
+              f"bubble fraction {bub:.3f}")
+    else:
+        step, pspecs, bspecs, pc = make_sharded_train_step(
+            cfg, tcfg, mesh, dp_axis=dp_axes(mesh))
+        tp = mesh.shape["model"]
     params = model.init_params(jax.random.key(0), cfg, tp=tp,
                                dtype=jnp.float32)
     opt = adamw_init(params)

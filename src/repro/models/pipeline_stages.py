@@ -1,0 +1,135 @@
+"""Pipeline-parallel stage partitioning of the layer stack.
+
+A pipeline stage owns a contiguous slice of ``cfg.layer_pattern``:
+stage 0 additionally runs the embedding, the last stage the final norm
++ logits + loss.  Two consumers:
+
+* **Cost modelling / placement** - ``partition_stages`` balances any
+  pattern (dense, MoE, SSM, hybrid) into contiguous slices so
+  ``tuner.placement`` and ``benchmarks/pipeline.py`` can price a
+  PP x TP x FSDP assignment for every zoo architecture.
+* **SPMD execution** (``training.pipeline``) - the stacked layer
+  params keep their single ``g0`` pytree and are *sharded over the
+  stage mesh axis on the leading layer dim* (``stage_param_specs``),
+  so inside ``shard_map`` every stage rank holds its slab and runs the
+  same scanned body.  This path requires a uniform stack
+  (``uniform_stage_rows``): one scan group, no shared attention, no
+  encoder/frontend prefix, rows divisible by stages - the layer axis
+  must shard evenly for all ranks to execute one program.
+
+Embedding and final norm are replicated across the stage axis (the
+embedding is consumed at both pipeline ends via weight tying); their
+gradients are summed over the stage axis by
+``training.pipeline.sync_stage_grads``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ledger
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.models.pcontext import ParallelContext
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSlice:
+    """One pipeline stage's contiguous slice of the layer pattern."""
+    index: int
+    start: int            # first layer row (inclusive)
+    stop: int             # past-the-end row
+    pattern: str          # the rows this stage executes
+
+    @property
+    def count(self) -> int:
+        return self.stop - self.start
+
+
+def partition_stages(cfg: ModelConfig, n_stages: int) -> list[StageSlice]:
+    """Balanced contiguous split of ``cfg.layer_pattern``: every stage
+    gets ``floor(L/S)`` rows and the first ``L mod S`` stages one extra
+    (the last stage already carries the logits/loss epilogue, so the
+    remainder is front-loaded)."""
+    n_rows = len(cfg.layer_pattern)
+    if n_stages < 1:
+        raise ValueError("n_stages must be >= 1")
+    if n_stages > n_rows:
+        raise ValueError(f"{n_stages} stages > {n_rows} layer rows")
+    base, extra = divmod(n_rows, n_stages)
+    out, start = [], 0
+    for s in range(n_stages):
+        cnt = base + (1 if s < extra else 0)
+        out.append(StageSlice(s, start, start + cnt,
+                              cfg.layer_pattern[start:start + cnt]))
+        start += cnt
+    return out
+
+
+def uniform_stage_rows(cfg: ModelConfig, n_stages: int) -> int:
+    """Rows per stage for the SPMD execution path, validating that the
+    stack is uniform enough to shard the stacked layer axis evenly.
+    Heterogeneous patterns still partition for cost modelling
+    (``partition_stages``); executing them would need per-stage
+    programs, which the single-controller SPMD step cannot express."""
+    if cfg.encoder is not None or cfg.frontend != "text":
+        raise NotImplementedError(
+            "pipeline execution supports decoder-only text models")
+    groups = blocks.scan_groups(cfg)
+    if len(groups) != 1 or groups[0].shared:
+        raise NotImplementedError(
+            "pipeline execution needs a uniform layer stack (one scan "
+            f"group); {cfg.name!r} has pattern {cfg.layer_pattern!r}")
+    if n_stages < 1 or groups[0].count % n_stages:
+        raise ValueError(
+            f"{groups[0].count} layers not divisible by {n_stages} stages")
+    return groups[0].count // n_stages
+
+
+def stage_param_specs(abstract: Params, stage_axis: str,
+                      base: Params | None = None) -> Params:
+    """PartitionSpecs sharding the stacked layer axis over the stage
+    mesh axis: each stage rank holds its contiguous slab of rows.
+    Embedding/final-norm (and any frontend leaves) stay replicated
+    across stages.  ``base`` composes an existing spec tree (e.g. FSDP
+    over a data axis): the stage axis replaces the layer-dim entry of
+    layer-stacked leaves and all other leaves keep their base spec."""
+    specs: Params = {}
+    for k, sub in abstract.items():
+        if k.startswith("g"):
+            if base is not None:
+                specs[k] = jax.tree.map(
+                    lambda b: P(stage_axis, *tuple(b)[1:]), base[k])
+            else:
+                specs[k] = jax.tree.map(lambda x: P(stage_axis), sub)
+        elif base is not None:
+            specs[k] = jax.tree.map(lambda b: P(*tuple(b)), base[k])
+        else:
+            specs[k] = jax.tree.map(lambda x: P(), sub)
+    return specs
+
+
+def stage_forward(slab: Params, h: jnp.ndarray, cfg: ModelConfig,
+                  pc: ParallelContext, positions: jnp.ndarray,
+                  remat: bool = True):
+    """Run this rank's slab of layer rows (leading axis = local rows)
+    with the same scanned body as ``model._run_groups``.  Returns
+    (h, aux_sum)."""
+    kind = cfg.layer_pattern[0]
+
+    def body(carry, p):
+        out, aux = blocks.row_forward(p, carry, kind, cfg, pc, positions)
+        return out, aux
+
+    if remat:
+        body = jax.checkpoint(body)
+    rows = jax.tree.leaves(slab)[0].shape[0]
+    with ledger.scale(rows):
+        h, auxs = lax.scan(body, h, slab)
+    return h, jnp.sum(auxs)

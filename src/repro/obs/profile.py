@@ -207,7 +207,19 @@ class StepEmulator:
         axis = choice.get("level")
         lv = self.topology.level_for(axis) if (
             self.topology is not None and axis is not None) else None
-        if lv is not None:
+        if choice["primitive"] == "p2p":
+            # stage-handoff cells price through the dedicated p2p
+            # oracles (the collective models don't know the primitive)
+            if lv is not None:
+                t = costmodel.predict_level_p2p_time(
+                    lv, int(choice["msg_bytes"]),
+                    backend=choice["backend"],
+                    slicing_factor=int(choice["slicing_factor"]))
+            else:
+                t = costmodel.predict_p2p_time(
+                    choice["backend"], int(choice["msg_bytes"]),
+                    slicing_factor=int(choice["slicing_factor"]))
+        elif lv is not None:
             t = costmodel.predict_level_time(
                 lv, choice["primitive"], int(choice["nranks"]),
                 int(choice["msg_bytes"]), backend=choice["backend"],

@@ -1,0 +1,399 @@
+"""Pipeline parallelism: schedules, bubble accounting, SPMD execution.
+
+**Schedules.**  ``schedule_1f1b`` / ``schedule_interleaved`` produce
+per-stage op lists (the order a multi-controller runtime would execute)
+and ``simulate`` runs them under greedy unit-time execution with the
+true dataflow dependencies - F(vs, m) after F(vs-1, m), B(vs, m) after
+B(vs+1, m) and F(vs, m) - raising ``PipelineDeadlock`` if the lists
+ever wedge.  Bubble closed forms (per stage, in per-op time units; an
+interleaved chunk op is ``1/v`` of a 1F1B stage op):
+
+* 1F1B:         span = 2M + 2(S-1),   bubble = 2(S-1)
+* interleaved:  span = 2Mv + 2(S-1),  bubble = 2(S-1)  (= 2(S-1)/v
+  stage-op units - the Megatron-style 1/v bubble shrink; requires
+  M % S == 0 so chunk groups tile the pipeline)
+
+**Execution.**  The single-controller SPMD step expresses the pipeline
+as a scan over ``M + S - 1`` ticks: at tick ``t`` stage ``s`` works on
+microbatch ``m = t - s`` (masked outside ``[0, M)``), pushing
+activations one hop with ``Communicator.send`` - so its AD transpose
+replays the reverse pipeline (``ppermute`` transposes to the inverse
+permute) and the backward handoff rides the same tuned p2p cell.  The
+schedule choice steers the host-side bubble/cost accounting and the op
+ordering a real runtime would follow; the SPMD arithmetic is
+schedule-independent (association order aside), with wire bytes and
+op totals matching the schedule's F/B counts.  This mirrors how the
+doorbell protocol is modelled-not-lowered on the TPU mesh
+(``core.mesh_collectives``): SSA data dependence stands in for the
+runtime's explicit synchronization.
+
+Equivalence: the pipelined loss equals the single-pass ``model.loss_fn``
+loss on the same batch up to fp association order - each microbatch
+crosses each layer exactly once and the per-microbatch means average
+back to the full-batch mean (``_mesh_runner.check_pipeline_train``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ledger
+from repro.core.api import Communicator
+from repro.models import layers, model, pipeline_stages
+from repro.models.config import ModelConfig
+from repro.models.pcontext import ParallelContext
+from repro.optim import AdamWState, adamw_update, linear_warmup_cosine
+
+SCHEDULES = ("1f1b", "interleaved")
+
+
+# --------------------------------------------------------------------- #
+# schedules (host side: op ordering + bubble accounting)
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    """One scheduled unit of stage work: a forward or backward pass of
+    one microbatch through one model chunk (chunk 0 unless
+    interleaved)."""
+    kind: str             # 'F' | 'B'
+    microbatch: int
+    chunk: int = 0
+
+
+class PipelineDeadlock(RuntimeError):
+    """Greedy execution of the per-stage op lists wedged: some stage's
+    next op waits on work that can never complete."""
+
+
+def schedule_1f1b(n_stages: int, n_microbatches: int) -> list[list[Op]]:
+    """PipeDream-flush 1F1B: stage ``s`` runs ``min(S-1-s, M)`` warmup
+    forwards, then alternates F/B in steady state, then drains the
+    remaining backwards.  Peak live activations per stage are bounded
+    by the warmup depth (S - s) instead of M (GPipe)."""
+    S, M = n_stages, n_microbatches
+    if S < 1 or M < 1:
+        raise ValueError("need n_stages >= 1 and n_microbatches >= 1")
+    out = []
+    for s in range(S):
+        warm = min(S - 1 - s, M)
+        ops = [Op("F", m) for m in range(warm)]
+        for i in range(M - warm):
+            ops.append(Op("F", warm + i))
+            ops.append(Op("B", i))
+        for i in range(max(M - warm, 0), M):
+            ops.append(Op("B", i))
+        out.append(ops)
+    return out
+
+
+def schedule_interleaved(n_stages: int, n_microbatches: int,
+                         n_chunks: int = 2) -> list[list[Op]]:
+    """Interleaved 1F1B (Megatron-style looping pipeline): each
+    physical stage hosts ``v = n_chunks`` model chunks, so virtual
+    stage ``c*S + s`` lives on physical stage ``s`` and a microbatch
+    loops through the pipeline ``v`` times.  Forward order walks chunk
+    groups of ``S`` microbatches (chunk 0 of microbatches 0..S-1, then
+    chunk 1 of the same group, ...), which is why ``M % S == 0`` is
+    required; backward mirrors it with chunks reversed.  Bubble per
+    stage is 2(S-1) *chunk* ops = 2(S-1)/v stage ops."""
+    S, M, v = n_stages, n_microbatches, n_chunks
+    if S < 1 or M < 1:
+        raise ValueError("need n_stages >= 1 and n_microbatches >= 1")
+    if v < 1:
+        raise ValueError("n_chunks must be >= 1")
+    if v == 1:
+        return schedule_1f1b(S, M)
+    if M % S:
+        raise ValueError(
+            f"interleaved schedule needs microbatches % stages == 0 "
+            f"(got M={M}, S={S})")
+    total = M * v
+
+    def f_op(k: int) -> Op:
+        g = k % (S * v)
+        return Op("F", (k // (S * v)) * S + g % S, g // S)
+
+    def b_op(k: int) -> Op:
+        g = k % (S * v)
+        return Op("B", (k // (S * v)) * S + g % S, v - 1 - g // S)
+
+    out = []
+    for s in range(S):
+        warm = min((S - 1 - s) * 2 + (v - 1) * S, total)
+        ops = [f_op(k) for k in range(warm)]
+        for i in range(total - warm):
+            ops.append(f_op(warm + i))
+            ops.append(b_op(i))
+        for i in range(max(total - warm, 0), total):
+            ops.append(b_op(i))
+        out.append(ops)
+    return out
+
+
+def make_schedule(schedule: str, n_stages: int, n_microbatches: int,
+                  n_chunks: int = 2) -> list[list[Op]]:
+    if schedule == "1f1b":
+        return schedule_1f1b(n_stages, n_microbatches)
+    if schedule == "interleaved":
+        return schedule_interleaved(n_stages, n_microbatches, n_chunks)
+    raise ValueError(f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+
+
+def simulate(per_stage_ops: list[list[Op]], n_chunks: int = 1) -> int:
+    """Greedy unit-time execution of the per-stage op lists under the
+    pipeline dataflow dependencies.  Each stage runs its ops strictly
+    in list order, one per tick, starting an op only when its inputs
+    exist: F(vs, m) needs F(vs-1, m); B(vs, m) needs F(vs, m) and
+    B(vs+1, m) (virtual stage vs = chunk*S + s).  Returns the span in
+    ticks; raises :class:`PipelineDeadlock` if no stage can make
+    progress before all ops complete."""
+    S = len(per_stage_ops)
+    V = n_chunks * S
+    done: dict = {}
+    idx = [0] * S
+    total = sum(len(o) for o in per_stage_ops)
+    ndone, t = 0, 0
+    while ndone < total:
+        runnable = []
+        for s in range(S):
+            if idx[s] >= len(per_stage_ops[s]):
+                continue
+            op = per_stage_ops[s][idx[s]]
+            vs = op.chunk * S + s
+            if op.kind == "F":
+                ok = vs == 0 or done.get(("F", vs - 1, op.microbatch),
+                                         total + 1) <= t
+            else:
+                ok = done.get(("F", vs, op.microbatch), total + 1) <= t \
+                    and (vs == V - 1
+                         or done.get(("B", vs + 1, op.microbatch),
+                                     total + 1) <= t)
+            if ok:
+                runnable.append((s, op, vs))
+        if not runnable:
+            stuck = {s: per_stage_ops[s][idx[s]] for s in range(S)
+                     if idx[s] < len(per_stage_ops[s])}
+            raise PipelineDeadlock(
+                f"wedged at tick {t} with {total - ndone} ops left: "
+                f"{stuck}")
+        for s, op, vs in runnable:
+            done[(op.kind, vs, op.microbatch)] = t + 1
+            idx[s] += 1
+            ndone += 1
+        t += 1
+    return t
+
+
+def bubble_count(n_stages: int, n_microbatches: int,
+                 schedule: str = "1f1b", n_chunks: int = 2) -> int:
+    """Per-stage idle ticks (in per-op time units: chunk ops for the
+    interleaved schedule): ``2 * (n_stages - 1)`` for both schedules -
+    the interleaved win is that its op unit is ``1/v`` of a stage op,
+    so the same tick count is ``2(S-1)/v`` stage-op units of idle
+    time."""
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if n_stages < 1 or n_microbatches < 1:
+        raise ValueError("need n_stages >= 1 and n_microbatches >= 1")
+    return 2 * (n_stages - 1)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int,
+                    schedule: str = "1f1b", n_chunks: int = 2) -> float:
+    """Idle fraction of the pipelined step: bubble / span.  For 1F1B
+    this is ``(S-1)/(M + S - 1)``; interleaving divides the bubble's
+    stage-op units by ``v``."""
+    v = n_chunks if schedule == "interleaved" else 1
+    busy = 2 * n_microbatches * v
+    bub = bubble_count(n_stages, n_microbatches, schedule, n_chunks)
+    return bub / (busy + bub)
+
+
+# --------------------------------------------------------------------- #
+# SPMD execution
+# --------------------------------------------------------------------- #
+
+def pipeline_loss_fn(params, batch: dict, cfg: ModelConfig,
+                     pc: ParallelContext, *, stage_axis: str,
+                     n_microbatches: int, remat: bool = True):
+    """Pipelined forward over the ``stage_axis`` mesh axis; call under
+    ``jax.grad`` for the reverse pipeline.  ``params`` is the standard
+    ``model.init_params`` pytree with the stacked layer leaves sharded
+    over the stage axis (``pipeline_stages.stage_param_specs``); the
+    local batch is split into ``n_microbatches`` along the batch dim.
+    Returns (loss, aux) matching ``model.loss_fn`` semantics (loss is
+    replicated across stages via one scalar all_reduce)."""
+    S = lax.axis_size(stage_axis)
+    sidx = lax.axis_index(stage_axis)
+    M = n_microbatches
+    tokens, labels = batch["tokens"], batch["labels"]
+    if tokens.shape[0] % M:
+        raise ValueError(f"local batch {tokens.shape[0]} not divisible "
+                         f"by {M} microbatches")
+    mb = tokens.shape[0] // M
+    seq = tokens.shape[1]
+    tok_mb = tokens.reshape((M, mb, seq))
+    lab_mb = labels.reshape((M, mb, seq))
+    mask = batch.get("loss_mask")
+    mask_mb = mask.reshape((M, mb, seq)) if mask is not None else None
+    positions = jnp.arange(seq)
+    is_first = sidx == 0
+    is_last = sidx == S - 1
+
+    def tick(carry, t):
+        h_recv, loss, aux = carry
+        m = t - sidx                     # this stage's microbatch now
+        valid = (m >= 0) & (m < M)
+        mi = jnp.clip(m, 0, M - 1)
+        tok = lax.dynamic_index_in_dim(tok_mb, mi, 0, keepdims=False)
+        emb = layers.embed_tokens(params["embed"], tok, cfg, pc)
+        h_in = jnp.where(is_first, emb.astype(h_recv.dtype), h_recv)
+        h_out, aux_t = pipeline_stages.stage_forward(
+            params["g0"], h_in, cfg, pc, positions, remat=remat)
+        # mask the warmup/drain ticks so they contribute nothing in
+        # either direction (the sender of an invalid tick sent zeros,
+        # so every rank's h_in is always finite)
+        h_out = jnp.where(valid, h_out, jnp.zeros_like(h_out))
+        hn = layers.rms_norm(h_out, params["final_norm"], cfg.norm_eps)
+        logits = layers.lm_logits(params["embed"], hn, cfg, pc)
+        lab = lax.dynamic_index_in_dim(lab_mb, mi, 0, keepdims=False)
+        mk = None if mask_mb is None else lax.dynamic_index_in_dim(
+            mask_mb, mi, 0, keepdims=False)
+        xent = layers.sharded_xent(logits, lab, pc, mask=mk,
+                                   vocab_size=cfg.vocab_size)
+        loss = loss + jnp.where(is_last & valid, xent, 0.0)
+        aux = aux + jnp.where(valid, aux_t, 0.0)
+        h_next = pc.comm.send(h_out, stage_axis)
+        return (h_next, loss, aux), None
+
+    h0 = jnp.zeros((mb, seq, cfg.d_model),
+                   jax.tree.leaves(params["embed"])[0].dtype)
+    ticks = M + S - 1
+    with ledger.scale(ticks):
+        (_, loss, aux), _ = lax.scan(
+            tick, (h0, jnp.float32(0.0), jnp.float32(0.0)),
+            jnp.arange(ticks))
+    # per-microbatch means average back to the full-batch mean; the
+    # loss lives on the last stage (zeros elsewhere), aux on each
+    # owning stage - one scalar sum over the stage axis shares both.
+    # The shared value rides under stop_gradient: under shard_map every
+    # stage rank seeds its own cotangent, so differentiating the psum
+    # itself would scale every grad by the stage count - each rank must
+    # differentiate only its local contribution (whose cotangents still
+    # reach the other stages' slabs through the transposed p2p hops).
+    def share(x):
+        s = pc.comm.all_reduce(x, stage_axis)
+        return (x + lax.stop_gradient(s - x)) / M
+
+    loss, aux = share(loss), share(aux)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def sync_stage_grads(grads, pc: ParallelContext, stage_axis: str):
+    """Sum the stage-replicated leaves' grads over the stage axis: the
+    embedding is consumed at both pipeline ends (tied weights), the
+    final norm only by the last stage - each rank holds a partial
+    gradient, and AdamW needs them identical.  Layer-stacked leaves
+    (``g*``) are stage-local slabs and stay untouched."""
+    return {k: (v if k.startswith("g") else jax.tree.map(
+        lambda g: pc.comm.all_reduce(g, stage_axis), v))
+            for k, v in grads.items()}
+
+
+def make_pipeline_train_step(cfg: ModelConfig, tcfg,
+                             pc: ParallelContext, *, stage_axis: str,
+                             n_stages: int, n_microbatches: int,
+                             schedule: str = "1f1b",
+                             n_chunks: int = 2):
+    """Pipeline-parallel train step for use inside ``shard_map``:
+    (params, opt_state, batch) -> (params, opt_state, metrics), the PP
+    analog of ``train_loop.make_train_step``.  Data parallelism over
+    ``pc.dp_axis`` is plain replicated-grad DP (grads psum-averaged
+    over the data axis after the stage-axis sync).  ``schedule`` /
+    ``n_chunks`` drive the bubble accounting reported in the metrics
+    (and validate the schedule is realizable for these shapes); the
+    SPMD arithmetic is schedule-independent (module docstring)."""
+    make_schedule(schedule, n_stages, n_microbatches, n_chunks)
+    lr_fn = linear_warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+    bub = bubble_fraction(n_stages, n_microbatches, schedule, n_chunks)
+
+    def lf(p, b):
+        loss, aux = pipeline_loss_fn(
+            p, b, cfg, pc, stage_axis=stage_axis,
+            n_microbatches=n_microbatches, remat=tcfg.remat)
+        if pc.dp_axis is not None:
+            loss = pc.dp_all_reduce_mean(loss)
+        return loss, aux
+
+    def step(params, opt_state, batch):
+        # ledger: AD transposes double every collective's wire bytes;
+        # remat replays the forward once more (same convention as
+        # train_loop.make_train_step)
+        with ledger.scale(2 if not tcfg.remat else 3):
+            (loss, aux), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, batch)
+        grads = sync_stage_grads(grads, pc, stage_axis)
+        if pc.dp_axis is not None:
+            grads = jax.tree.map(
+                lambda g: pc.dp_all_reduce_mean(g), grads)
+        lr = lr_fn(opt_state.step)
+        params, opt_state = adamw_update(params, grads, opt_state, lr)
+        return params, opt_state, {"loss": loss, "lr": lr,
+                                   "bubble_fraction": jnp.float32(bub),
+                                   **aux}
+    return step
+
+
+def make_sharded_pipeline_step(cfg: ModelConfig, tcfg, mesh, *,
+                               n_microbatches: int,
+                               stage_axis: str = "stage",
+                               dp_axis: Optional[str] = "data",
+                               schedule: str = "1f1b",
+                               n_chunks: int = 2) -> tuple:
+    """Builds the shard_map'ed pipeline train step for a
+    (stage, data) production mesh - the PP analog of
+    ``train_loop.make_sharded_train_step``.
+
+    Returns (step_fn, param_specs, batch_specs, pc).  Layer-stacked
+    params are sharded over the stage axis (each rank holds its slab of
+    rows), embedding/final-norm replicated; the batch is sharded over
+    the data axis and replicated across stages (every stage indexes its
+    own microbatch per tick).
+    """
+    from repro.data.pipeline import make_batch_specs
+
+    n_stages = int(mesh.shape[stage_axis])
+    pipeline_stages.uniform_stage_rows(cfg, n_stages)
+    dp = dp_axis if dp_axis and mesh.shape.get(dp_axis, 1) > 1 else None
+
+    plan = None
+    if tcfg.plan_path is not None:
+        from repro.core.hw import CXL_POOL, INFINIBAND
+        from repro.tuner import load_plan
+        plan = load_plan(tcfg.plan_path, pool=CXL_POOL, ib=INFINIBAND)
+    comm = Communicator(backend=tcfg.backend,
+                        slicing_factor=tcfg.slicing_factor,
+                        allreduce_mode=tcfg.allreduce_mode, plan=plan)
+    pc = ParallelContext(tp_axis=None, dp_axis=dp, tp=1, comm=comm)
+
+    abstract = model.abstract_params(cfg, tp=1)
+    pspecs = pipeline_stages.stage_param_specs(abstract, stage_axis)
+    bspecs = make_batch_specs(cfg, dp)   # dp=None -> replicated
+    inner = make_pipeline_train_step(
+        cfg, tcfg, pc, stage_axis=stage_axis, n_stages=n_stages,
+        n_microbatches=n_microbatches, schedule=schedule,
+        n_chunks=n_chunks)
+
+    ospecs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+    mspecs = {"loss": P(), "lr": P(), "bubble_fraction": P(),
+              "xent": P(), "aux": P()}
+    step_fn = jax.jit(jax.shard_map(
+        inner, mesh=mesh, in_specs=(pspecs, ospecs, bspecs),
+        out_specs=(pspecs, ospecs, mspecs), check_vma=False))
+    return step_fn, pspecs, bspecs, pc

@@ -35,8 +35,9 @@ See ``docs/API.md`` for the public-surface reference and
 ``docs/ARCHITECTURE.md`` for how the pieces fit.
 """
 from repro.tuner.costmodel import (ici_time, predict_exposed_time,
-                                   predict_level_time, predict_time,
-                                   roofline_compute_time)
+                                   predict_level_p2p_time,
+                                   predict_level_time, predict_p2p_time,
+                                   predict_time, roofline_compute_time)
 from repro.tuner.online import (OnlineTuner, choices_changed,
                                 fold_measurements)
 from repro.tuner.placement import (AxisTraffic, CollectiveCall,
@@ -60,6 +61,7 @@ __all__ = [
     "Choice", "Plan", "PlanVersionError", "TuneGrid", "DEFAULT_GRID",
     "SMOKE_GRID",
     "predict_time", "predict_exposed_time", "predict_level_time",
+    "predict_p2p_time", "predict_level_p2p_time",
     "ici_time", "roofline_compute_time",
     "generate_plan", "overlap_windows_from_dryrun",
     "hardware_fingerprint",

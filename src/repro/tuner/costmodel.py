@@ -118,6 +118,80 @@ def predict_level_time(level: Level, primitive: str, nranks: int,
     return ici_time(primitive, nranks, msg_bytes, level.ici_cfg)
 
 
+def predict_p2p_time(backend: str, msg_bytes: int, *,
+                     slicing_factor: int = 1,
+                     pool: CXLPoolConfig = CXL_POOL,
+                     ib: InfiniBandConfig = INFINIBAND) -> float:
+    """Predicted completion time of one point-to-point hop
+    (``Communicator.send``: the full payload moves exactly one ring
+    hop).  The collective oracles don't apply - a p2p is not a ring
+    program, it is one producer/consumer pair:
+
+    * ``cxl`` - the pool handoff of ``core/doorbell.py``: the producer
+      writes the payload (bounded by the slower of the device and
+      server caps), rings the doorbell (flush + cross-socket
+      visibility), the consumer invalidates/polls and reads it back
+      out.  Chunking by the slicing factor pipelines the consumer read
+      behind the producer write - each extra chunk costs another
+      doorbell ring + poll, so the sweep's argmin over factors finds
+      the paper-style chunking sweet spot.
+    * ``ring`` - one direct alpha-beta NIC transfer (no copy-RDMA
+      chain to pipeline against, so chunking only adds per-message
+      overhead).
+    """
+    s = max(0, int(msg_bytes))
+    if s == 0:
+        return 0.0
+    f = max(1, int(slicing_factor))
+    if backend == "cxl":
+        bw = min(pool.device_bw, pool.server_bw)
+        chunk = s / f
+        # producer writes stream; the consumer's read of chunk k
+        # overlaps the write of k+1, exposing only the last chunk's
+        # read; every chunk pays its own doorbell ring + poll.
+        return (pool.memcpy_overhead + s / bw + chunk / bw
+                + f * (pool.doorbell_latency + pool.poll_interval)
+                + pool.access_latency)
+    if backend == "ring":
+        return (ib.latency + f * ib.message_overhead
+                + s / ib.effective_bw)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def predict_level_p2p_time(level: Level, msg_bytes: int, *,
+                           backend: str = "ring",
+                           slicing_factor: int = 1) -> float:
+    """One p2p hop priced against a topology level's own fabric config
+    (the p2p analog of ``predict_level_time``):
+
+    * ``cxl`` level - ``backend='cxl'`` is the pool write + doorbell
+      commit with the level's ``CXLPoolConfig``; ``backend='ring'`` is
+      the alternative transport over the level's IB config;
+    * ``ib`` / ``ici`` level - ring only (the pool handoff does not
+      exist off the pool); returns ``inf`` for ``cxl`` so sweeps can
+      enumerate candidates uniformly.
+    """
+    if backend not in ("ring", "cxl"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if level.fabric == "cxl":
+        return predict_p2p_time(backend, msg_bytes,
+                                slicing_factor=slicing_factor,
+                                pool=level.pool_cfg, ib=level.ib_cfg)
+    if backend != "ring":
+        return math.inf
+    if level.fabric == "ib":
+        return predict_p2p_time("ring", msg_bytes,
+                                slicing_factor=slicing_factor,
+                                ib=level.ib_cfg)
+    ici = level.ici_cfg
+    shim = InfiniBandConfig(link_bw=ici.link_bw,
+                            efficiency=ici.efficiency,
+                            message_overhead=ici.message_overhead,
+                            latency=ici.latency)
+    return predict_p2p_time("ring", msg_bytes,
+                            slicing_factor=slicing_factor, ib=shim)
+
+
 def roofline_compute_time(flops: float, hbm_bytes: float = 0.0, *,
                           peak_flops: float = TPU_V5E.peak_flops_bf16,
                           hbm_bw: float = TPU_V5E.hbm_bw) -> float:

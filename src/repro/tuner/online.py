@@ -74,7 +74,8 @@ from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
                            InfiniBandConfig)
 from repro.tuner import costmodel
 from repro.tuner.plan import Choice, Plan, size_bucket
-from repro.tuner.sweep import DEFAULT_GRID, TuneGrid, _candidates
+from repro.tuner.sweep import (DEFAULT_GRID, TuneGrid, _candidates,
+                               _p2p_candidates)
 
 DEFAULT_ALPHA = 0.3         # EWMA smoothing factor
 DEFAULT_MIN_SAMPLES = 3     # samples before measured overrides oracle
@@ -387,6 +388,17 @@ class OnlineTuner:
                    mode: str) -> float:
         """Oracle time at the *actual* message size (not the bucket
         floor), for calibration ratios."""
+        if primitive == "p2p":
+            # point-to-point cells price through the dedicated p2p
+            # oracles (the collective models key EFFICIENCY/ALPHA by
+            # primitive and don't know the stage handoff)
+            if lkey is not None and lkey in self._levels:
+                return costmodel.predict_level_p2p_time(
+                    self._levels[lkey], msg_bytes, backend=backend,
+                    slicing_factor=factor)
+            return costmodel.predict_p2p_time(
+                backend, msg_bytes, slicing_factor=factor,
+                pool=self.pool, ib=self.ib)
         if lkey is not None and lkey in self._levels:
             return costmodel.predict_level_time(
                 self._levels[lkey], primitive, nranks, msg_bytes,
@@ -531,7 +543,13 @@ class OnlineTuner:
             best_cost = None
             best_st = None
             priced = {}
-            for cand in _candidates(key[0], self.grid, backends):
+            # p2p cells compete over the handoff candidate set (ring
+            # is a single hop: factor 1, no fused variants), matching
+            # what the offline sweep resolved them against
+            cands = _p2p_candidates(self.grid, backends) \
+                if key[0] == "p2p" else \
+                _candidates(key[0], self.grid, backends)
+            for cand in cands:
                 if len(cand) > 3 and cand[3]:
                     # fused variants have no measured channel (the
                     # ledger times the collective, not the fused

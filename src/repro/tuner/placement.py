@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 from typing import Optional, Sequence
 
@@ -94,9 +95,11 @@ class CollectiveMix:
     def for_model(cls, cfg, axes: dict, *, seq: int = 4096,
                   batch_per_rank: int = 8, param_bytes: int = 2,
                   act_bytes: int = 2, tp_axis: str = "model",
-                  overlap_gathers: bool = True) -> "CollectiveMix":
+                  overlap_gathers: bool = True,
+                  pp_axis: Optional[str] = None,
+                  microbatches: int = 8) -> "CollectiveMix":
         """Analytic mix for a model config on logical ``axes``
-        (``{"data": fsdp_degree, "model": tp_degree}``).
+        (``{"data": fsdp_degree, "model": tp_degree, "stage": pp}``).
 
         Per layer and step: the TP axis carries 4 activation
         AllReduces (attention + MLP output, forward and backward);
@@ -106,8 +109,18 @@ class CollectiveMix:
         get the roofline residency of one layer's compute as their
         overlap window (the double-buffered prefetch of
         ``core.overlap`` hides them behind the previous layer).
+
+        A pipeline axis (``pp_axis`` of degree ``p > 1``) carries the
+        stage handoff instead: ``2 * microbatches`` p2p hops per step
+        (forward activations + backward grads), each one microbatch's
+        activation slab.  Pipelining also shrinks every *other* axis's
+        per-layer traffic by ``1/p`` - a rank owns only its stage's
+        slice of the stack, which is exactly why a PP x FSDP placement
+        can beat FSDP-only at the same device count.
         """
         n_layers = max(1, cfg.n_layers)
+        pp = int(axes.get(pp_axis, 1)) if pp_axis else 1
+        local_layers = n_layers / max(1, pp)
         layer_bytes = int(cfg.param_count() // n_layers) * param_bytes
         act = batch_per_rank * seq * cfg.d_model * act_bytes
         # fwd+bwd FLOPs of one layer's matmuls on this rank's tokens
@@ -121,16 +134,20 @@ class CollectiveMix:
                 # kept (traffic-free) so the mesh still carries the axis
                 loads.append(AxisTraffic(name, int(size), ()))
                 continue
-            if name == tp_axis:
+            if pp_axis is not None and name == pp_axis:
+                calls = (CollectiveCall(
+                    "p2p", max(1, act // max(1, microbatches)),
+                    calls=2.0 * microbatches),)
+            elif name == tp_axis:
                 calls = (CollectiveCall("all_reduce", act,
-                                        calls=4.0 * n_layers),)
+                                        calls=4.0 * local_layers),)
             else:
                 calls = (CollectiveCall("all_gather",
                                         layer_bytes // max(1, size),
-                                        calls=2.0 * n_layers,
+                                        calls=2.0 * local_layers,
                                         overlap_s=window),
                          CollectiveCall("reduce_scatter", layer_bytes,
-                                        calls=1.0 * n_layers))
+                                        calls=1.0 * local_layers))
             loads.append(AxisTraffic(name, int(size), calls))
         if not any(a.size > 1 for a in loads):
             raise ValueError(f"no axis with size > 1 in {axes}")
@@ -204,8 +221,19 @@ def _best_level_time(level: Level, primitive: str, nranks: int,
     tuner sweep would resolve to."""
     if nranks <= 1 or msg_bytes <= 0:
         return 0.0
+    s = max(1, int(msg_bytes))
+    if primitive == "p2p":
+        # one full-payload hop; cxl sweeps the doorbell-chunking factor
+        # exactly as the plan sweep does (costmodel.predict_p2p_time)
+        best = math.inf
+        for b in level.backends():
+            factors = (1, 2, 4, 8, 16) if b == "cxl" else (1,)
+            t = min(costmodel.predict_level_p2p_time(
+                level, s, backend=b, slicing_factor=f) for f in factors)
+            best = min(best, t * _link_penalty(level, b, penalties))
+        return best
     return min(costmodel.predict_level_time(
-        level, primitive, nranks, max(1, int(msg_bytes)), backend=b)
+        level, primitive, nranks, s, backend=b)
         * _link_penalty(level, b, penalties)
         for b in level.backends())
 
@@ -247,6 +275,18 @@ def _run_call_time(levels_sizes: Sequence[tuple], primitive: str,
     """
     s = max(1, int(msg_bytes))
     pen = penalties
+    if primitive == "p2p":
+        # the ring hop moves the full payload over exactly one link per
+        # tick: a split or grouped axis is gated by the slowest boundary
+        # a neighbor pair crosses, never the sum of the fabrics
+        times = []
+        for lv, n in levels_sizes:
+            t = _best_level_time(lv, "p2p", n, s, pen)
+            if lv.grouped:
+                parent = (parents or {}).get(lv.axis) or lv
+                t = max(t, _best_level_time(parent, "p2p", 2, s, pen))
+            times.append(t)
+        return max(times)
     if len(levels_sizes) == 1:
         level, n = levels_sizes[0]
         if level.grouped:

@@ -31,6 +31,12 @@ collective's epilogue/prologue compute to run inside a fused Pallas
 kernel (``kernels.fused_collectives``), which the sweep prices by
 folding the epilogue roofline into the cell's overlap window.
 
+Format v6 adds point-to-point cells: ``("p2p", bucket, nranks, level)``
+entries tune the pipeline stage handoff (``Communicator.send``) -
+backend ``cxl`` is the pool write + doorbell commit, ``ring`` the
+direct NIC/ICI hop - with the slicing factor pipelining the consumer
+read behind the producer write on the pool.
+
 Lookup is log2-bucketed with nearest-bucket fallback: an unseen message
 size resolves to the closest tuned bucket (ties to the smaller), an
 unseen rank count to the closest tuned nranks for that primitive, and
@@ -49,12 +55,14 @@ from repro.core.hw import (CXL_POOL, INFINIBAND, CXLPoolConfig,
                            InfiniBandConfig)
 from repro.core.topology import Topology
 
-PLAN_VERSION = 5          # v5 adds the per-cell fused-kernel knob
-_READABLE_VERSIONS = (1, 2, 3, 4, 5)
+PLAN_VERSION = 6          # v6 adds point-to-point (pipeline) cells
+_READABLE_VERSIONS = (1, 2, 3, 4, 5, 6)
 # v1: flat cells only; v2: + per-cell overlap fields; v3: + level keys;
 # v4: + measured_us/sample_count/ewma_alpha (online re-tuning feedback);
 # v5: + fused (epilogue/prologue folded into a fused collective+compute
-# kernel, kernels.fused_collectives).
+# kernel, kernels.fused_collectives);
+# v6: + "p2p" point-to-point cells (pipeline stage handoff, tuned per
+# (size bucket, level): cxl pool-write+doorbell vs direct ring hop).
 # Older formats load forward (missing fields default); unknown formats
 # raise PlanVersionError.
 

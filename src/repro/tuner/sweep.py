@@ -31,6 +31,13 @@ window is widened by the roofline residency of the epilogue it absorbs
 (``costmodel.fused_window``), so fusion competes in the same argmin as
 backend and slicing factor.  The fixed-knob baselines stay unfused, so
 regret keeps meaning "vs what a knob-free run would do".
+
+Plans are format v6: alongside the eight collectives the sweep tunes
+``p2p`` cells for the pipeline stage handoff (``Communicator.send``) -
+the pool write + doorbell commit vs the direct NIC/ICI hop, priced by
+``costmodel.predict_p2p_time`` (the collective oracles don't apply to
+a single producer/consumer pair), with the slicing factor pipelining
+the consumer read behind the producer write on the pool.
 """
 from __future__ import annotations
 
@@ -89,6 +96,20 @@ def _candidates(primitive: str, grid: TuneGrid, backends=("ring", "cxl")):
         yield ("cxl", f, m, False)
         if fusable:
             yield ("cxl", f, m, True)
+
+
+def _p2p_candidates(grid: TuneGrid, backends=("ring", "cxl")):
+    """Yield (backend, slicing_factor, allreduce_mode, fused) tuples
+    for the point-to-point handoff.  Ring is one NIC/ICI transfer
+    (chunking only adds per-message overhead, so factor 1); cxl sweeps
+    the slicing factors - each chunk pipelines the consumer read behind
+    the producer write at the cost of a doorbell ring + poll."""
+    if "ring" in backends:
+        yield ("ring", 1, "two_phase", False)
+    if "cxl" not in backends:
+        return
+    for f in grid.slicing_factors:
+        yield ("cxl", f, "two_phase", False)
 
 
 OverlapCompute = Union[float, Callable[[str, int, int], float], None]
@@ -190,6 +211,18 @@ def generate_plan(grid: TuneGrid = DEFAULT_GRID, *,
                         prim, n, size, w, _candidates(prim, grid), cost))
                 if progress:
                     progress(f"tuned {prim} nranks={n}")
+
+        def p2p_cost(backend, prim, n, size, factor, mode):
+            return costmodel.predict_p2p_time(
+                backend, size, slicing_factor=factor, pool=pool, ib=ib)
+
+        for n in grid.nranks:
+            for size in grid.sizes:
+                w = _window(overlap_compute, "p2p", size, n)
+                plan.add("p2p", size, n, _tune_cell(
+                    "p2p", n, size, w, _p2p_candidates(grid), p2p_cost))
+            if progress:
+                progress(f"tuned p2p nranks={n}")
         return plan
 
     plan = Plan(fingerprint=topology.fingerprint(),
@@ -216,6 +249,21 @@ def generate_plan(grid: TuneGrid = DEFAULT_GRID, *,
                 if progress:
                     progress(f"tuned {prim} nranks={n} "
                              f"level={level.axis}/{level.fabric}")
+
+        def p2p_cost(backend, prim, n, size, factor, mode, _lv=level):
+            return costmodel.predict_level_p2p_time(
+                _lv, size, backend=backend, slicing_factor=factor)
+
+        for n in level_nranks:
+            for size in grid.sizes:
+                w = _window(overlap_compute, "p2p", size, n)
+                plan.add("p2p", size, n, _tune_cell(
+                    "p2p", n, size, w,
+                    _p2p_candidates(grid, level.backends()), p2p_cost),
+                    level=lkey)
+            if progress:
+                progress(f"tuned p2p nranks={n} "
+                         f"level={level.axis}/{level.fabric}")
     return plan
 
 

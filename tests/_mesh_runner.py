@@ -20,7 +20,14 @@ Validates, for ring and cxl backends:
      reduce_scatter vs the flat reference (no fallback events), and
      ``fuse_kernels`` train steps vs the unfused bucketed path on
      regular and ragged (4+2) dp meshes, with the ledger's fused-byte
-     split flipping on and off with the flag.
+     split flipping on and off with the flag;
+  9. flat-fallback audit: all_to_all / scatter on a grouped (4+2)
+     level book one explicit flat-on-ragged event per call while
+     still matching the flat-schedule numerics;
+ 10. pipeline parallelism: a 2-stage x 4-dp pipelined train step
+     (1F1B microbatch loop, Communicator.send stage handoff over the
+     tuned p2p plan cells) matches the FSDP-only 8-rank step, with
+     the p2p wire bytes attributed to the stage level.
 """
 import os
 
@@ -940,6 +947,149 @@ def check_fused_train(ragged: bool) -> None:
           f"fused AG {snap_f['fused_bytes']['all_gather']/1e6:.2f}MB)")
 
 
+def check_fallback_audit() -> None:
+    """all_to_all / scatter have no grouped schedule: on a grouped
+    (4+2) level they run the flat single-axis program and must book one
+    explicit flat-on-ragged fallback event per call - with the level
+    and fabric they degraded on - while still computing the flat
+    schedule's exact answer.  The inverse of check_ragged_reduce_scatter
+    (which asserts the ragged path books NO events)."""
+    from repro.core import ledger
+    from repro.core.hw import CXLPoolConfig, InfiniBandConfig
+    from repro.core.topology import Level, Topology
+
+    rng = np.random.default_rng(31)
+    topo = Topology(levels=(
+        Level("pod", "ib", ib=InfiniBandConfig(link_bw=2.5e9)),
+        Level("node", "cxl", pool=CXLPoolConfig(device_bw=18e9),
+              shape=(4, 2)),
+    ))
+    mesh6 = jax.sharding.Mesh(np.asarray(jax.devices()[:6]), ("node",))
+    # per-rank lead 12 divides the 6-rank axis; a2a block / scatter
+    # segment = 2 rows
+    x = rng.standard_normal((6 * 12, 5)).astype(np.float32)
+
+    def run(f, arr):
+        return np.asarray(jax.jit(jax.shard_map(
+            f, mesh=mesh6, in_specs=P("node"), out_specs=P("node"),
+            check_vma=False))(arr))
+
+    for backend in ("ring", "cxl"):
+        comm = Communicator(backend=backend, topology=topo,
+                            slicing_factor=4)
+        ledger.reset()
+        a2a = run(lambda a: comm.all_to_all(a, "node"), x)
+        sc = run(lambda a: comm.scatter(a, "node", root=1), x)
+        snap = ledger.snapshot()
+        prims = sorted(e["primitive"] for e in snap["fallbacks"])
+        assert prims == ["all_to_all", "scatter"], \
+            (backend, snap["fallbacks"])
+        for e in snap["fallbacks"]:
+            assert (e["level"], e["fabric"], e["reason"]) == \
+                ("node", "cxl", "flat_on_ragged"), e
+            assert e["calls"] == 1.0, e
+        # the degraded calls still attribute wire bytes to the level
+        lvl = snap["level_wire_bytes"]["node/cxl"]
+        assert lvl.get("all_to_all", 0.0) > 0.0, lvl
+        assert lvl.get("scatter", 0.0) > 0.0, lvl
+        # numerics vs the flat oracle
+        z = x.reshape(6, 12, 5)
+        np.testing.assert_allclose(
+            a2a.reshape(6, 6, 2, 5),
+            z.reshape(6, 6, 2, 5).transpose(1, 0, 2, 3), rtol=1e-6,
+            err_msg=backend)
+        np.testing.assert_allclose(
+            sc.reshape(6, 2, 5), z[1].reshape(6, 2, 5), rtol=1e-6,
+            err_msg=backend)
+    print("  fallback-audit ok (all_to_all/scatter on 4+2 book "
+          "flat_on_ragged)")
+
+
+def check_pipeline_train() -> None:
+    """Pipeline parallelism end to end on real devices: a 2-stage x
+    4-dp pipelined AdamW step (1F1B microbatch loop, stage handoff via
+    ``Communicator.send`` resolved from the plan's tuned p2p cells)
+    must produce the same loss and updated params as the FSDP-only
+    8-rank step on the same global batch, and the ledger must attribute
+    the activation/cotangent handoff bytes to the stage level's fabric
+    as ``p2p`` - not to any collective kind."""
+    from repro import tuner
+    from repro.core import ledger
+    from repro.core.hw import CXLPoolConfig, InfiniBandConfig
+    from repro.core.topology import Level, Topology, set_active_topology
+    from repro.models.config import ModelConfig, dense_pattern
+    from repro.training.pipeline import (bubble_fraction,
+                                         make_sharded_pipeline_step)
+    from repro.training.train_loop import make_sharded_train_step
+
+    rng = np.random.default_rng(7)
+    cfg = ModelConfig(name="tiny-pp", family="dense", n_layers=4,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=96, layer_pattern=dense_pattern(4))
+    B, L, M = 16, 16, 4
+    batch = {"tokens": jnp.asarray(
+                 rng.integers(0, cfg.vocab_size, (B, L))),
+             "labels": jnp.asarray(
+                 rng.integers(0, cfg.vocab_size, (B, L)))}
+    params = model.init_params(jax.random.key(1), cfg, tp=1,
+                               dtype=jnp.float32)
+    tcfg = TrainConfig(lr=1e-3, warmup=0, clip_norm=None, remat=False,
+                       backend="ring")
+
+    # FSDP-only reference: the same 8 devices as one data axis
+    mesh_ref = jax.make_mesh((8, 1), ("data", "model"))
+    sharding.set_mesh_sizes({"data": 8, "model": 1})
+    step_ref, _, _, _ = make_sharded_train_step(cfg, tcfg, mesh_ref)
+    p_ref, _, m_ref = step_ref(params, adamw_init(params), batch)
+
+    # pipelined run: IB between stages, the CXL pool under the data
+    # axis - the plan's per-level p2p cells steer the stage handoff
+    base_plan = tuner.get_active_plan()
+    topo = Topology(levels=(
+        Level("stage", "ib", ib=InfiniBandConfig(link_bw=2.5e9)),
+        Level("data", "cxl", pool=CXLPoolConfig(device_bw=18e9),
+              shape=(4,)),
+    ))
+    plan = tuner.generate_plan(
+        tuner.TuneGrid(sizes=(256, 4096, 65536), nranks=(2, 4, 8),
+                       slicing_factors=(1, 4)), topology=topo)
+    tuner.set_active_plan(plan)
+    set_active_topology(topo)
+    try:
+        mesh = jax.make_mesh((2, 4), ("stage", "data"))
+        tcfg_pp = dataclasses.replace(tcfg, backend="auto")
+        step_pp, _, _, _ = make_sharded_pipeline_step(
+            cfg, tcfg_pp, mesh, n_microbatches=M)
+        ledger.reset()
+        p_pp, _, m_pp = step_pp(params, adamw_init(params), batch)
+        snap = ledger.snapshot()
+    finally:
+        tuner.set_active_plan(base_plan)
+        set_active_topology(None)
+
+    assert abs(float(m_pp["loss"]) - float(m_ref["loss"])) < 1e-5, \
+        (float(m_pp["loss"]), float(m_ref["loss"]))
+    errs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                        p_ref, p_pp)
+    worst = max(jax.tree.leaves(errs))
+    # same AdamW-first-step amplification band as check_fused_train:
+    # the two paths differ only in f32 reduction order
+    assert worst < 5e-4, f"pipeline-vs-fsdp param delta {worst}"
+    lvl = snap["level_wire_bytes"]
+    assert lvl.get("stage/ib", {}).get("p2p", 0.0) > 0.0, lvl
+    assert "p2p" not in lvl.get("data/cxl", {}), lvl
+    assert lvl.get("data/cxl", {}).get("all_reduce", 0.0) > 0.0, lvl
+    p2p_audit = [a for a in snap["auto_choices"]
+                 if a["primitive"] == "p2p"]
+    assert p2p_audit and \
+        all(a["level"] == "stage" for a in p2p_audit), p2p_audit
+    assert abs(float(m_pp["bubble_fraction"])
+               - bubble_fraction(2, M)) < 1e-6
+    print(f"  pipeline-train ok (loss {float(m_pp['loss']):.4f} vs "
+          f"fsdp {float(m_ref['loss']):.4f}, worst delta {worst:.1e}, "
+          f"p2p {lvl['stage/ib']['p2p']/1e3:.1f}KB on stage/ib)")
+
+
 if __name__ == "__main__":
     # backend='auto' resolves from the process-wide plan: tune a tiny
     # grid spanning the message sizes/axis sizes these checks use.
@@ -957,6 +1107,8 @@ if __name__ == "__main__":
     check_survivor_reconfig()
     check_fused_train(ragged=False)
     check_fused_train(ragged=True)
+    check_fallback_audit()
+    check_pipeline_train()
     # ring/cxl draw from the module RNG in the original order (the
     # chaotic train-equivalence checks below are sensitive to the global
     # draw sequence); the added checks use a detached stream.

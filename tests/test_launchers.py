@@ -53,7 +53,7 @@ def test_train_launcher_online_retune(tmp_path):
     assert "online re-tuning" in proc.stdout
     assert "saved refined plan" in proc.stdout
     doc = json.load(open(out))
-    assert doc["version"] == 5
+    assert doc["version"] == 6
     # the refined plan carries measured feedback somewhere
     assert any(e.get("sample_count", 0) > 0 for e in doc["entries"])
 

@@ -111,11 +111,19 @@ def test_overlap_plan_marks_cells_and_keeps_guarantee():
         assert ch.overlap
         assert ch.hidden_time >= 0.0
         size = 1 << bucket
-        t_ring = tuner.predict_exposed_time(
-            "ring", prim, n, size, overlappable_compute=1e-3)
-        t_cxl = tuner.predict_exposed_time(
-            "cxl", prim, n, size, overlappable_compute=1e-3,
-            slicing_factor=4, allreduce_mode="two_phase")
+        if prim == "p2p":
+            # the handoff's baselines window the same way: exposed =
+            # max(0, wire - overlappable compute)
+            t_ring = max(0.0, tuner.predict_p2p_time("ring", size)
+                         - 1e-3)
+            t_cxl = max(0.0, tuner.predict_p2p_time(
+                "cxl", size, slicing_factor=4) - 1e-3)
+        else:
+            t_ring = tuner.predict_exposed_time(
+                "ring", prim, n, size, overlappable_compute=1e-3)
+            t_cxl = tuner.predict_exposed_time(
+                "cxl", prim, n, size, overlappable_compute=1e-3,
+                slicing_factor=4, allreduce_mode="two_phase")
         assert ch.predicted_time <= min(t_ring, t_cxl) * (1 + 1e-9)
     assert plan.meta["overlap_compute_s"] == pytest.approx(1e-3)
 

@@ -1,0 +1,185 @@
+"""Unit coverage of the pipeline p2p plumbing outside shard_map: the
+point-to-point cost oracles (flat + per-level dispatch), the sweep's
+format-v6 ``p2p`` plan cells, plan lookup over level tags, and the
+placement mix's pipeline terms (``pp_axis`` handoff traffic + the 1/p
+per-layer shrink on the other axes)."""
+import math
+
+import pytest
+
+from repro import tuner
+from repro.configs import get_config
+from repro.core.hw import CXLPoolConfig, ICIConfig, InfiniBandConfig
+from repro.core.topology import Level, Topology
+from repro.tuner import costmodel
+from repro.tuner.placement import CollectiveMix, plan_placement
+
+MiB = 1 << 20
+
+
+# --------------------------------------------------------------------- #
+# cost oracles
+# --------------------------------------------------------------------- #
+
+def test_p2p_oracle_basics():
+    assert costmodel.predict_p2p_time("ring", 0) == 0.0
+    assert costmodel.predict_p2p_time("cxl", 0) == 0.0
+    assert costmodel.predict_p2p_time("ring", MiB) > 0.0
+    assert costmodel.predict_p2p_time("cxl", MiB) > 0.0
+    with pytest.raises(ValueError):
+        costmodel.predict_p2p_time("nvlink", 4096)
+
+
+def test_p2p_oracle_monotone_in_size():
+    for backend in ("ring", "cxl"):
+        ts = [costmodel.predict_p2p_time(backend, s)
+              for s in (4096, 1 << 16, MiB, 16 * MiB)]
+        assert ts == sorted(ts), (backend, ts)
+
+
+def test_p2p_slicing_tradeoff():
+    # on the pool, chunking pipelines the consumer read behind the
+    # producer write; each chunk pays a doorbell ring + poll, so the
+    # win shows on large payloads
+    big = 64 * MiB
+    assert costmodel.predict_p2p_time("cxl", big, slicing_factor=8) < \
+        costmodel.predict_p2p_time("cxl", big, slicing_factor=1)
+    # a ring hop has nothing to pipeline against: chunking only adds
+    # per-message overhead
+    assert costmodel.predict_p2p_time("ring", big, slicing_factor=1) <= \
+        costmodel.predict_p2p_time("ring", big, slicing_factor=8)
+
+
+def test_level_p2p_dispatch():
+    cxl = Level("node", "cxl", pool=CXLPoolConfig(device_bw=18e9),
+                ib=InfiniBandConfig(link_bw=10e9))
+    ib = Level("pod", "ib", ib=InfiniBandConfig(link_bw=2.5e9))
+    ici = Level("gpu", "ici", ici=ICIConfig(link_bw=45e9))
+    s = MiB
+    # cxl level: both backends exist (pool handoff vs the rival IB)
+    assert math.isfinite(
+        costmodel.predict_level_p2p_time(cxl, s, backend="cxl"))
+    assert math.isfinite(
+        costmodel.predict_level_p2p_time(cxl, s, backend="ring"))
+    # off the pool there is no pool handoff
+    assert costmodel.predict_level_p2p_time(ib, s, backend="cxl") \
+        == math.inf
+    assert costmodel.predict_level_p2p_time(ici, s, backend="cxl") \
+        == math.inf
+    # the fast ICI hop beats the slow inter-node IB hop
+    assert costmodel.predict_level_p2p_time(ici, s) < \
+        costmodel.predict_level_p2p_time(ib, s)
+    with pytest.raises(ValueError):
+        costmodel.predict_level_p2p_time(cxl, s, backend="nvlink")
+
+
+# --------------------------------------------------------------------- #
+# sweep cells + plan lookup
+# --------------------------------------------------------------------- #
+
+GRID = tuner.TuneGrid(sizes=(4096, 16 * MiB), nranks=(2, 4),
+                      slicing_factors=(1, 4, 8))
+
+
+def test_sweep_emits_flat_p2p_cells():
+    plan = tuner.generate_plan(GRID)
+    assert plan.to_json()["version"] == 6
+    for size in GRID.sizes:
+        for n in GRID.nranks:
+            ch = plan.lookup("p2p", size, n)
+            assert ch is not None, (size, n)
+            assert ch.backend in ("ring", "cxl")
+            if ch.backend == "ring":
+                # a single hop: nothing to pipeline against
+                assert ch.slicing_factor == 1
+    # nearest-bucket + nearest-nranks fallback applies to p2p too
+    assert plan.lookup("p2p", 5000, 3) is not None
+
+
+def test_sweep_emits_per_level_p2p_cells():
+    topo = Topology(levels=(
+        Level("stage", "ib", ib=InfiniBandConfig(link_bw=2.5e9)),
+        Level("node", "cxl", pool=CXLPoolConfig(device_bw=18e9),
+              ib=InfiniBandConfig(link_bw=10e9)),
+    ))
+    plan = tuner.generate_plan(GRID, topology=topo)
+    ib_key = topo.level_key("stage")
+    node_key = topo.level_key("node")
+    for lkey in (ib_key, node_key):
+        for size in GRID.sizes:
+            assert plan.lookup("p2p", size, 2, level=lkey) is not None
+    # the ib level has no pool: every p2p cell there must ride ring
+    for key, ch in plan.entries.items():
+        if key[0] == "p2p" and len(key) == 4 and key[3] == ib_key:
+            assert ch.backend == "ring", (key, ch)
+    # on the pool level the 16MiB bucket beats the 10GB/s IB rival
+    big = plan.lookup("p2p", 16 * MiB, 2, level=node_key)
+    assert big.backend == "cxl", big
+    # and the round trip preserves the level-tagged cells
+    again = tuner.Plan.from_json(plan.to_json())
+    assert again.entries == plan.entries
+
+
+def test_online_refresh_preserves_unmeasured_p2p_cells():
+    # no observations: the refresh reprices every cell against the
+    # same candidate set the sweep used, so nothing may flip
+    plan = tuner.generate_plan(GRID)
+    ot = tuner.OnlineTuner(plan, min_samples=1)
+    assert not tuner.choices_changed(plan, ot.refresh())
+
+
+# --------------------------------------------------------------------- #
+# placement mix
+# --------------------------------------------------------------------- #
+
+def test_for_model_pipeline_terms():
+    cfg = get_config("deepseek-coder-33b")
+    mix = CollectiveMix.for_model(cfg, {"stage": 4, "model": 4,
+                                        "data": 2},
+                                  pp_axis="stage", microbatches=8)
+    stage = mix.axis("stage")
+    assert [c.primitive for c in stage.calls] == ["p2p"]
+    # forward activations + backward cotangents: 2 hops per microbatch
+    assert stage.calls[0].calls == 16.0
+    # pipelining shrinks the other axes' per-layer traffic by 1/p
+    base = CollectiveMix.for_model(cfg, {"model": 4, "data": 2})
+    assert mix.axis("model").bytes_per_step == pytest.approx(
+        base.axis("model").bytes_per_step / 4)
+    assert mix.axis("data").bytes_per_step == pytest.approx(
+        base.axis("data").bytes_per_step / 4)
+
+
+def test_placement_prices_pipeline_mix():
+    topo = Topology(levels=(
+        Level("pod", "ib", ib=InfiniBandConfig(link_bw=2.5e9),
+              shape=(2,)),
+        Level("node", "cxl", pool=CXLPoolConfig(device_bw=18e9),
+              ib=InfiniBandConfig(link_bw=10e9), shape=(4,)),
+        Level("gpu", "ici", ici=ICIConfig(link_bw=45e9), shape=(4,)),
+    ))
+    cfg = get_config("deepseek-coder-33b")
+    mix = CollectiveMix.for_model(cfg, {"stage": 4, "model": 4,
+                                        "data": 2},
+                                  pp_axis="stage", microbatches=8)
+    plan = plan_placement(mix, topo)
+    assert plan.ranked
+    assert math.isfinite(plan.best.predicted_exposed_s)
+    assert plan.best.predicted_exposed_s > 0.0
+
+
+def test_from_dryrun_keeps_p2p_level_attribution():
+    rec = {"ledger": {"auto_choices": [
+        {"primitive": "p2p", "msg_bytes": 65536, "nranks": 2,
+         "backend": "cxl", "slicing_factor": 4,
+         "allreduce_mode": "two_phase", "level": "stage",
+         "calls": 8.0},
+        {"primitive": "all_reduce", "msg_bytes": 4096, "nranks": 4,
+         "backend": "ring", "slicing_factor": 1,
+         "allreduce_mode": "two_phase", "level": None, "calls": 2.0},
+    ]}}
+    mix = CollectiveMix.from_dryrun(rec, {"data": 4})
+    stage = mix.axis("stage")
+    assert stage.calls[0].primitive == "p2p"
+    assert stage.calls[0].calls == 8.0
+    assert stage.size == 2            # inferred from the audit
+    assert mix.axis("data").size == 4

@@ -1,0 +1,159 @@
+"""Property tests for the pipeline schedules (unit + hypothesis).
+
+Three families, over arbitrary (stages, microbatches[, chunks]):
+deadlock-freedom with the closed-form span under greedy dataflow
+execution, forward-precedes-backward per (stage, microbatch, chunk),
+and the bubble closed forms reconciling with the simulated span.
+Falls back to ``_hypothesis_shim`` when hypothesis is not installed.
+"""
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+except ImportError:              # optional dep: use the local shim
+    import _hypothesis_shim as hp
+    import _hypothesis_shim as st
+import pytest
+
+from repro.training.pipeline import (Op, PipelineDeadlock, bubble_count,
+                                     bubble_fraction, make_schedule,
+                                     schedule_1f1b, schedule_interleaved,
+                                     simulate)
+
+
+# --------------------------------------------------------------------- #
+# 1F1B
+# --------------------------------------------------------------------- #
+
+@hp.given(st.integers(1, 6), st.integers(1, 12))
+def test_1f1b_deadlock_free_with_closed_form_span(S, M):
+    span = simulate(schedule_1f1b(S, M))
+    assert span == 2 * M + 2 * (S - 1)
+
+
+@hp.given(st.integers(1, 6), st.integers(1, 12))
+def test_1f1b_each_stage_runs_every_microbatch_once(S, M):
+    for ops in schedule_1f1b(S, M):
+        assert len(ops) == 2 * M
+        assert sorted(o.microbatch for o in ops if o.kind == "F") == \
+            list(range(M))
+        assert sorted(o.microbatch for o in ops if o.kind == "B") == \
+            list(range(M))
+        assert all(o.chunk == 0 for o in ops)
+
+
+@hp.given(st.integers(1, 6), st.integers(1, 12))
+def test_1f1b_forward_precedes_backward(S, M):
+    for ops in schedule_1f1b(S, M):
+        seen_f = set()
+        for o in ops:
+            if o.kind == "F":
+                seen_f.add(o.microbatch)
+            else:
+                assert o.microbatch in seen_f, (o, ops)
+
+
+@hp.given(st.integers(1, 6), st.integers(1, 12))
+def test_1f1b_bubble_reconciles_with_span(S, M):
+    # per-stage idle ticks = span minus the stage's own 2M busy ticks
+    span = simulate(schedule_1f1b(S, M))
+    assert span - 2 * M == bubble_count(S, M, "1f1b")
+    assert bubble_fraction(S, M, "1f1b") == pytest.approx(
+        (span - 2 * M) / span)
+
+
+@hp.given(st.integers(1, 6), st.integers(1, 12))
+def test_1f1b_warmup_depth_bounds_live_activations(S, M):
+    # stage s holds at most min(S-s, M) forward activations at once:
+    # the PipeDream-flush memory bound (GPipe would hold M)
+    for s, ops in enumerate(schedule_1f1b(S, M)):
+        live = peak = 0
+        for o in ops:
+            live += 1 if o.kind == "F" else -1
+            peak = max(peak, live)
+        assert peak == min(S - s, M), (s, peak)
+
+
+# --------------------------------------------------------------------- #
+# interleaved (Megatron-style looping pipeline)
+# --------------------------------------------------------------------- #
+
+@hp.given(st.integers(1, 4), st.integers(1, 3), st.integers(2, 4))
+def test_interleaved_deadlock_free_with_closed_form_span(S, k, v):
+    M = k * S
+    span = simulate(schedule_interleaved(S, M, n_chunks=v), n_chunks=v)
+    assert span == 2 * M * v + 2 * (S - 1)
+
+
+@hp.given(st.integers(1, 4), st.integers(1, 3), st.integers(2, 4))
+def test_interleaved_forward_precedes_backward_per_chunk(S, k, v):
+    M = k * S
+    for ops in schedule_interleaved(S, M, n_chunks=v):
+        assert len(ops) == 2 * M * v
+        seen = set()
+        for o in ops:
+            assert 0 <= o.chunk < v
+            if o.kind == "F":
+                assert (o.microbatch, o.chunk) not in seen
+                seen.add((o.microbatch, o.chunk))
+            else:
+                assert (o.microbatch, o.chunk) in seen, (o, ops)
+
+
+@hp.given(st.integers(1, 4), st.integers(1, 3), st.integers(2, 4))
+def test_interleaved_bubble_shrinks_by_chunk_count(S, k, v):
+    M = k * S
+    span = simulate(schedule_interleaved(S, M, n_chunks=v), n_chunks=v)
+    # same 2(S-1) idle ticks as 1F1B, but the tick is a chunk op
+    # (1/v of a stage op): the Megatron 1/v bubble shrink
+    assert span - 2 * M * v == bubble_count(S, M, "interleaved", v)
+    assert bubble_fraction(S, M, "interleaved", v) == pytest.approx(
+        (span - 2 * M * v) / span)
+    if S > 1:
+        assert bubble_fraction(S, M, "interleaved", v) < \
+            bubble_fraction(S, M, "1f1b")
+
+
+def test_interleaved_requires_divisible_microbatches():
+    with pytest.raises(ValueError, match="microbatches % stages"):
+        schedule_interleaved(3, 4, n_chunks=2)
+
+
+def test_interleaved_single_chunk_is_1f1b():
+    assert schedule_interleaved(3, 6, n_chunks=1) == schedule_1f1b(3, 6)
+
+
+# --------------------------------------------------------------------- #
+# dispatcher + simulator
+# --------------------------------------------------------------------- #
+
+def test_make_schedule_dispatch_and_validation():
+    assert make_schedule("1f1b", 2, 4) == schedule_1f1b(2, 4)
+    assert make_schedule("interleaved", 2, 4, n_chunks=2) == \
+        schedule_interleaved(2, 4, n_chunks=2)
+    with pytest.raises(ValueError, match="unknown schedule"):
+        make_schedule("gpipe", 2, 4)
+    with pytest.raises(ValueError):
+        schedule_1f1b(0, 4)
+    with pytest.raises(ValueError):
+        schedule_1f1b(2, 0)
+    with pytest.raises(ValueError):
+        bubble_count(2, 4, "gpipe")
+
+
+def test_simulate_detects_deadlock():
+    # a backward scheduled before its own forward can never start
+    with pytest.raises(PipelineDeadlock, match="wedged"):
+        simulate([[Op("B", 0), Op("F", 0)]])
+    # ... and a cross-stage wedge: last stage drains backward-first
+    # while stage 0 never forwards microbatch 1 ahead of B(1)
+    bad = [[Op("F", 0), Op("B", 1), Op("F", 1), Op("B", 0)],
+           [Op("F", 0), Op("B", 0), Op("F", 1), Op("B", 1)]]
+    with pytest.raises(PipelineDeadlock):
+        simulate(bad)
+
+
+def test_simulate_degenerate_single_stage():
+    # S=1: no pipeline, no bubble - span is just the 2M sequential ops
+    assert simulate(schedule_1f1b(1, 5)) == 10
+    assert bubble_count(1, 5) == 0
+    assert bubble_fraction(1, 5) == 0.0

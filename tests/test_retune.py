@@ -46,11 +46,11 @@ def _entry(**kw):
     return base
 
 
-def test_plan_v1_to_v5_compat_chain():
+def test_plan_v1_to_v6_compat_chain():
     """The same entries doc loads under every readable version, with
     the fields each version lacks defaulting: v1 has no overlap
     fields, v1/v2 no level keys, v1-v3 no measured feedback, v1-v4 no
-    fused knob."""
+    fused knob, v1-v5 no p2p cells."""
     for version in (1, 2, 3):
         p = tuner.Plan.from_json(
             {"version": version, "fingerprint": "f", "meta": {},
@@ -81,16 +81,30 @@ def test_plan_v1_to_v5_compat_chain():
     assert p5.entries[("all_gather", 20, 3)].fused is True
     again5 = tuner.Plan.from_json(p5.to_json())
     assert again5.entries == p5.entries
-    assert p5.to_json()["version"] == 5
+    # a v5 doc re-serializes at the current version
+    assert p5.to_json()["version"] == 6
+    # v6: point-to-point (pipeline stage handoff) cells round-trip,
+    # flat and level-tagged
+    v6 = {"version": 6, "fingerprint": "f", "meta": {},
+          "entries": [_entry(primitive="p2p"),
+                      _entry(primitive="p2p", level="0:ib",
+                             backend="ring", slicing_factor=1)]}
+    p6 = tuner.Plan.from_json(v6)
+    assert p6.entries[("p2p", 20, 3)].backend == "cxl"
+    assert p6.entries[("p2p", 20, 3, "0:ib")].backend == "ring"
+    assert p6.lookup("p2p", 1 << 20, 3, level="0:ib").backend == "ring"
+    again6 = tuner.Plan.from_json(p6.to_json())
+    assert again6.entries == p6.entries
+    assert p6.to_json()["version"] == 6
 
 
-def test_plan_v6_raises_version_error(tmp_path):
-    doc = {"version": 6, "fingerprint": "x", "entries": []}
+def test_plan_v7_raises_version_error(tmp_path):
+    doc = {"version": 7, "fingerprint": "x", "entries": []}
     path = tmp_path / "plan.json"
     path.write_text(json.dumps(doc))
     with pytest.raises(tuner.PlanVersionError) as ei:
         tuner.load_plan(str(path))
-    assert "6" in str(ei.value) and "(1, 2, 3, 4, 5)" in str(ei.value)
+    assert "7" in str(ei.value) and "(1, 2, 3, 4, 5, 6)" in str(ei.value)
 
 
 def test_saved_plan_roundtrips_measured_fields(tiny_plan, tmp_path):
@@ -395,7 +409,7 @@ def test_choices_changed_ignores_same_resolution_growth(tiny_plan):
 
 def test_fold_measurements_via_ledger(tiny_plan):
     """End-to-end tune --measurements path: ledger timing records in,
-    refreshed v5 plan out."""
+    refreshed v6 plan out."""
     ledger.reset()
     ch = tiny_plan.lookup("all_gather", 16 * MiB, 3)
     for _ in range(3):
@@ -409,7 +423,7 @@ def test_fold_measurements_via_ledger(tiny_plan):
     # half a second measured: every oracle candidate beats it
     assert (new.backend, new.slicing_factor) != \
         (ch.backend, ch.slicing_factor)
-    assert refined.to_json()["version"] == 5
+    assert refined.to_json()["version"] == 6
 
 
 def test_online_tuner_validates_args(tiny_plan):

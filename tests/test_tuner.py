@@ -89,10 +89,17 @@ def test_auto_never_slower_than_fixed(tiny_plan):
     both fixed-ring and fixed-cxl (default knobs) for its cell."""
     for (prim, bucket, n), ch in tiny_plan.entries.items():
         size = 1 << bucket
-        t_ring = tuner.predict_time("ring", prim, n, size)
-        t_cxl = tuner.predict_time("cxl", prim, n, size,
-                                   slicing_factor=4,
-                                   allreduce_mode="two_phase")
+        if prim == "p2p":
+            # the stage handoff's fixed baselines: one direct hop vs
+            # the pool write at the default chunking
+            t_ring = tuner.predict_p2p_time("ring", size)
+            t_cxl = tuner.predict_p2p_time("cxl", size,
+                                           slicing_factor=4)
+        else:
+            t_ring = tuner.predict_time("ring", prim, n, size)
+            t_cxl = tuner.predict_time("cxl", prim, n, size,
+                                       slicing_factor=4,
+                                       allreduce_mode="two_phase")
         best_fixed = min(t_ring, t_cxl)
         assert ch.predicted_time <= best_fixed * (1 + 1e-9), \
             (prim, bucket, n, ch)
